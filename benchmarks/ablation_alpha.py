@@ -1,0 +1,28 @@
+"""Paper App. I.3 (Fig. 13): EMA timescale alpha + prefix-string ablation.
+
+AUC of the accuracy-token curve as a function of alpha, with the probe
+suffix [</think>] vs [</think>, ANS-prefix].  Paper's finding: effective
+for alpha > 0.1; prefix helps older models."""
+import numpy as np
+
+from benchmarks.trace_harness import (
+    build_trace,
+    curve_auc,
+    pass1_at_line,
+    replay_ema_stop,
+    tokens_at_line,
+)
+
+
+def run(out_rows: list) -> dict:
+    tr = build_trace()
+    rec = {}
+    for alpha in (0.01, 0.05, 0.1, 0.2, 0.4):
+        pts = []
+        for d in [2.0 ** -e for e in range(0, 20)]:
+            line = replay_ema_stop(tr, tr["eat"], alpha=alpha, delta=d)
+            pts.append((tokens_at_line(tr, line).sum(), pass1_at_line(tr, line).mean()))
+        pts = np.array(pts)
+        rec[f"auc_alpha_{alpha}"] = curve_auc(pts[:, 0], pts[:, 1])
+        out_rows.append((f"ablation_auc_alpha_{alpha}", 0.0, rec[f"auc_alpha_{alpha}"]))
+    return rec

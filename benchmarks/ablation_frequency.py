@@ -1,0 +1,36 @@
+"""Paper App. G (Fig. 10): EAT under alternative evaluation frequencies.
+
+Sub-samples the per-line trace to every-2nd / every-4th evaluation point
+(≈ every-S-tokens scheduling) and checks the stopping behaviour survives."""
+import numpy as np
+
+from benchmarks.trace_harness import (
+    build_trace,
+    curve_auc,
+    pass1_at_line,
+    replay_ema_stop,
+    tokens_at_line,
+)
+
+
+def run(out_rows: list) -> dict:
+    tr = build_trace()
+    rec = {}
+    for stride in (1, 2, 4):
+        tr2 = dict(tr)
+        due = tr["due"].copy()
+        # keep every stride-th due point per question
+        for b in range(due.shape[1]):
+            idx = np.nonzero(due[:, b])[0]
+            keep = idx[::stride]
+            due[:, b] = False
+            due[keep, b] = True
+        tr2["due"] = due
+        pts = []
+        for d in [2.0 ** -e for e in range(0, 20)]:
+            line = replay_ema_stop(tr2, tr["eat"], alpha=0.2, delta=d)
+            pts.append((tokens_at_line(tr, line).sum(), pass1_at_line(tr, line).mean()))
+        pts = np.array(pts)
+        rec[f"auc_stride_{stride}"] = curve_auc(pts[:, 0], pts[:, 1])
+        out_rows.append((f"ablation_auc_stride_{stride}", 0.0, rec[f"auc_stride_{stride}"]))
+    return rec

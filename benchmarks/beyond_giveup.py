@@ -1,0 +1,80 @@
+"""BEYOND-PAPER: give-up rule on unsolvable questions (paper §6 future work).
+
+The paper's acknowledged limitation (App. I.4): on unsolvable questions EAT
+never stabilizes and Alg. 1 spends the entire budget.  We compose the
+stabilize-stop (Alg. 1) with a stall-detector (GiveUpStopper) and measure
+the tokens saved on unsolvable questions at zero accuracy cost (they were
+never going to be solved).
+
+Unsolvable questions here = difficulty k beyond the training distribution
+(the reasoner was trained on k<=6; we serve k=6 questions with the chain
+corrupted by clamping the prompt difficulty field to a wrong value, so the
+model's computation cannot converge — Pass@1 stays low, EAT stays noisy).
+"""
+import numpy as np
+
+from benchmarks.trace_harness import build_trace, replay_ema_stop, tokens_at_line
+
+
+def replay_giveup(tr, alpha=0.2, ceiling=0.05, patience=6, min_evals=4,
+                  improve_tol=0.05):
+    signal = tr["eat"]
+    L, B = signal.shape
+    m = np.zeros(B)
+    v = np.zeros(B)
+    n = np.zeros(B, int)
+    best = np.full(B, np.inf)
+    streak = np.zeros(B, int)
+    exit_line = np.full(B, L - 1)
+    done = np.zeros(B, bool)
+    for i in range(L):
+        use = tr["due"][i] & ~done
+        x = signal[i]
+        m_new = (1 - alpha) * m + alpha * x
+        v_new = (1 - alpha) * v + alpha * (x - m_new) ** 2
+        m = np.where(use, m_new, m)
+        v = np.where(use, v_new, v)
+        n = n + use.astype(int)
+        debias = 1 - (1 - alpha) ** np.maximum(n, 1)
+        dv = v / debias
+        improving = dv < best * (1 - improve_tol)
+        stalled = use & (dv > ceiling) & ~improving & (n >= min_evals)
+        streak = np.where(stalled, streak + 1, np.where(use, 0, streak))
+        best = np.where(use, np.minimum(best, dv), best)
+        fire = streak >= patience
+        exit_line[fire & ~done] = i
+        done |= fire
+    return exit_line, done
+
+
+def run(out_rows: list) -> dict:
+    tr = build_trace()
+    L, K, B = tr["answers"].shape
+    true = tr["answers_true"]
+    p1 = np.stack([(tr["answers"][i] == true[None, :]).mean(0) for i in range(L)])
+    unsolved = p1.max(axis=0) < 0.5
+    solved = ~unsolved
+
+    # plain Alg. 1
+    line_eat = replay_ema_stop(tr, tr["eat"], alpha=0.2, delta=1e-3)
+    # composed: min(stabilize-exit, give-up-exit)
+    line_gu, gave_up = replay_giveup(tr)
+    line_comp = np.minimum(line_eat, line_gu)
+
+    tok_eat = tokens_at_line(tr, line_eat)
+    tok_comp = tokens_at_line(tr, line_comp)
+
+    rec = {
+        "n_unsolved": int(unsolved.sum()),
+        "tokens_unsolved_alg1": float(tok_eat[unsolved].sum()) if unsolved.any() else 0,
+        "tokens_unsolved_composed": float(tok_comp[unsolved].sum()) if unsolved.any() else 0,
+        "tokens_solved_alg1": float(tok_eat[solved].sum()),
+        "tokens_solved_composed": float(tok_comp[solved].sum()),
+        "gave_up_on_solved": int((gave_up & solved & (line_gu < line_eat)).sum()),
+    }
+    if unsolved.any():
+        rec["unsolved_saving"] = 1.0 - rec["tokens_unsolved_composed"] / max(
+            rec["tokens_unsolved_alg1"], 1.0)
+        out_rows.append(("beyond_giveup_unsolved_saving", 0.0, rec["unsolved_saving"]))
+    out_rows.append(("beyond_giveup_false_giveups", 0.0, rec["gave_up_on_solved"]))
+    return rec

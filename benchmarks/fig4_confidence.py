@@ -1,0 +1,39 @@
+"""Paper Fig. 4 / App. I.5: EAT vs rollout confidence (Yang et al. 2025b,
+Eq. 16) as early-exit signals, at two EMA window sizes.  Confidence needs a
+5-token greedy rollout per evaluation (5x the probe cost); EAT is
+rollout-free — same stopping machinery, so the comparison isolates the
+signal."""
+import numpy as np
+
+from benchmarks.trace_harness import (
+    build_trace,
+    curve_auc,
+    pass1_at_line,
+    replay_ema_stop,
+    tokens_at_line,
+)
+
+
+def sweep(tr, signal, deltas, alpha):
+    pts = []
+    for d in deltas:
+        line = replay_ema_stop(tr, signal, alpha=alpha, delta=d)
+        pts.append((tokens_at_line(tr, line).sum(), pass1_at_line(tr, line).mean()))
+    return np.array(pts)
+
+
+def run(out_rows: list) -> dict:
+    tr = build_trace()
+    rec = {}
+    for alpha in (0.1, 0.2):
+        eat_pts = sweep(tr, tr["eat"], [2.0 ** -e for e in range(0, 20)], alpha)
+        # confidence stabilizes upward; its EMA-variance works identically
+        conf_pts = sweep(tr, tr["confidence"], [2.0 ** -e for e in range(4, 26)], alpha)
+        rec[f"auc_eat_alpha{alpha}"] = curve_auc(eat_pts[:, 0], eat_pts[:, 1])
+        rec[f"auc_conf_alpha{alpha}"] = curve_auc(conf_pts[:, 0], conf_pts[:, 1])
+        out_rows.append((f"fig4_auc_eat_a{alpha}", 0.0, rec[f"auc_eat_alpha{alpha}"]))
+        out_rows.append((f"fig4_auc_conf_a{alpha}", 0.0, rec[f"auc_conf_alpha{alpha}"]))
+    # evaluation cost ratio: confidence = rollout_len decode steps vs EAT =
+    # one parallel probe forward (len 2): tokens of extra compute per eval
+    rec["eval_cost_ratio_conf_over_eat"] = 5.0 / 1.0
+    return rec

@@ -1,0 +1,70 @@
+"""Paper Fig. 5: black-box proxy monitoring — a proxy model computes EAT
+from the verbal stream of a different reasoning model, and the probe time
+fits inside the generator's chunk time (overlap headroom, Fig. 5b)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def run(out_rows: list) -> dict:
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from examples.common import get_reasoner, make_engine
+    from repro.configs.base import get_config
+    from repro.core.eat import make_probe
+    from repro.core.monitor import ReasoningMonitor
+    from repro.core.stopping import EATStopper
+    from repro.data.synthetic import ChainTask, Tokens
+    from repro.models import Model
+    from repro.serving.proxy import ProxyMonitor
+
+    model, params, task = get_reasoner()
+    engine = make_engine(model, params, max_tokens=64)
+
+    # SMALLER proxy (the paper's 1.5B-monitors-70B shape at toy scale):
+    # the timing claim (Fig. 5b: probe hides behind generation) is what we
+    # measure here; proxy signal QUALITY with a trained proxy is exercised
+    # in examples/blackbox_proxy.py
+    pcfg = get_config("tiny")
+    proxy_model = Model(pcfg, attn_impl="xla")
+    proxy_params = proxy_model.init(jax.random.PRNGKey(1))
+    mon = ReasoningMonitor(
+        stopper=EATStopper(alpha=0.2, delta=1e-3),
+        probe=make_probe(Tokens.END_THINK, (Tokens.ANS,)),
+        newline_id=Tokens.NEWLINE,
+    )
+    proxy = ProxyMonitor(model=proxy_model, params=proxy_params, monitor=mon,
+                         capacity=128)
+
+    rng = np.random.default_rng(5)
+    b = task.serve_batch(rng, 4)
+    st = engine.start(jnp.asarray(b["prompts"]), jnp.asarray(b["prompt_len"]),
+                      jax.random.PRNGKey(0))
+    pst = proxy.start(jnp.asarray(b["prompts"]), jnp.asarray(b["prompt_len"]))
+
+    CHUNK = 8
+    gen_times = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        buf = []
+        for _ in range(CHUNK):
+            st = st._replace(active=jnp.ones_like(st.active))
+            st = engine._decode_fn(engine.params, st)
+            buf.append(np.asarray(st.last_token))
+        gen_times.append(time.perf_counter() - t0)
+        pst = proxy.observe_chunk(pst, jnp.asarray(np.stack(buf, 1)))
+
+    gen_ms = float(np.mean(gen_times) * 1e3)
+    probe_ms = float(np.mean(pst["probe_seconds"]) * 1e3)
+    rec = {
+        "chunk_tokens": CHUNK,
+        "generator_chunk_ms": gen_ms,
+        "proxy_probe_ms": probe_ms,
+        "overlap_headroom": gen_ms / max(probe_ms, 1e-9),
+        "proxy_eat_finite": bool(np.isfinite(np.asarray(pst["last_eat"])).all()),
+    }
+    out_rows.append(("fig5_overlap_headroom", probe_ms * 1e3, rec["overlap_headroom"]))
+    return rec

@@ -1,0 +1,58 @@
+"""Paper Fig. 6 (+Fig. 19): #UA@K — performance-overhead trade-off.
+
+(a) #UA@K needs K >= 16 to match EAT's accuracy-token curve;
+(b) counting the rollout tokens, its true cost is far above EAT;
+(c) per-evaluation wall time: K rollouts of 4 tokens vs one EAT probe.
+"""
+import time
+
+import numpy as np
+
+from benchmarks.trace_harness import (
+    build_trace,
+    curve_auc,
+    pass1_at_line,
+    replay_ema_stop,
+    replay_ua_stop,
+    tokens_at_line,
+)
+
+
+def run(out_rows: list) -> dict:
+    tr = build_trace()
+    L, K, B = tr["answers"].shape
+    rec = {}
+
+    eat_pts = []
+    for d in [2.0 ** -e for e in range(0, 20)]:
+        line = replay_ema_stop(tr, tr["eat"], alpha=0.2, delta=d)
+        eat_pts.append((tokens_at_line(tr, line).sum(), pass1_at_line(tr, line).mean()))
+    eat_pts = np.array(eat_pts)
+    rec["auc_eat"] = curve_auc(eat_pts[:, 0], eat_pts[:, 1])
+
+    rollout_len = 4
+    for k in (4, 8, 16):
+        pts, pts_true = [], []
+        for max_u in (1, 2, 3):
+            line = replay_ua_stop(tr, k=k, max_unique=max_u)
+            toks = tokens_at_line(tr, line)
+            acc = pass1_at_line(tr, line).mean()
+            # true cost includes K rollouts of rollout_len at every due line
+            n_evals = np.array([tr["due"][: line[b] + 1, b].sum() for b in range(B)])
+            true_cost = toks.sum() + (n_evals * k * rollout_len).sum()
+            pts.append((toks.sum(), acc))
+            pts_true.append((true_cost, acc))
+        pts = np.array(pts)
+        rec[f"ua_k{k}_acc_at_u1"] = float(pts[0, 1])
+        rec[f"ua_k{k}_reasoning_tokens"] = float(pts[0, 0])
+        rec[f"ua_k{k}_true_tokens"] = float(np.array(pts_true)[0, 0])
+        out_rows.append((f"fig6_ua_k{k}_true_over_reasoning", 0.0,
+                         rec[f"ua_k{k}_true_tokens"] / max(rec[f"ua_k{k}_reasoning_tokens"], 1)))
+
+    # EAT true cost: + len(probe)=2 positions per evaluation (prefilled in
+    # parallel ~ 1 decode-token equivalent, paper §4.3)
+    line = replay_ema_stop(tr, tr["eat"], alpha=0.2, delta=1e-3)
+    n_evals = np.array([tr["due"][: line[b] + 1, b].sum() for b in range(B)])
+    rec["eat_true_tokens"] = float(tokens_at_line(tr, line).sum() + n_evals.sum())
+    out_rows.append(("fig6_eat_true_tokens", 0.0, rec["eat_true_tokens"]))
+    return rec

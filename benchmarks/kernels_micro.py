@@ -1,0 +1,37 @@
+"""Kernel micro-benchmarks: fused entropy probe vs naive materialize-logits
+(CPU wall time for the XLA paths; the Pallas kernels are validated in
+interpret mode by tests and targeted at TPU)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.entropy_probe.ops import _xla_entropy
+from repro.kernels.entropy_probe.ref import next_token_entropy_ref
+
+
+def _time(fn, n=10):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6   # us
+
+
+def run(out_rows: list) -> dict:
+    rec = {}
+    d = 1024
+    for V in (32_768, 131_072):
+        h = jax.random.normal(jax.random.PRNGKey(0), (8, d), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (d, V), jnp.float32) * 0.05
+        f_ref = jax.jit(lambda h, w: next_token_entropy_ref(h, w, V))
+        f_onl = jax.jit(lambda h, w: _xla_entropy(h, w, V, block_v=8192))
+        np.testing.assert_allclose(np.asarray(f_ref(h, w)), np.asarray(f_onl(h, w)),
+                                   atol=1e-4, rtol=1e-4)
+        t_ref = _time(lambda: f_ref(h, w).block_until_ready())
+        t_onl = _time(lambda: f_onl(h, w).block_until_ready())
+        rec[f"V{V}"] = {"naive_us": t_ref, "online_us": t_onl}
+        out_rows.append((f"kernel_entropy_naive_V{V}", t_ref, 0.0))
+        out_rows.append((f"kernel_entropy_online_V{V}", t_onl, t_ref / max(t_onl, 1e-9)))
+    return rec

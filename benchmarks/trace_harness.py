@@ -1,0 +1,146 @@
+"""Shared evaluation harness: the paper's App. H offline protocol.
+
+Generate ONE long reasoning chain per question with the trained synthetic
+reasoner and record, at every paragraph break: token count, EAT, K forced
+rollout answers, and the 5-token greedy confidence (Eq. 16).  Every
+benchmark figure then *replays* this trace against different stopping rules
+— "saving it once to disk and replaying it offline to compute metrics at
+arbitrary exit thresholds without re-querying the model" (App. H).
+
+Cached at artifacts/trace.npz.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from examples.common import get_reasoner, make_engine  # noqa: E402
+from repro.data.synthetic import ChainTask  # noqa: E402
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+TRACE = os.path.join(ART, "trace.npz")
+
+N_QUESTIONS = 32
+ROLLOUT_K = 16
+MAX_TOKENS = 128
+
+
+def build_trace(n_questions=N_QUESTIONS, rollout_k=ROLLOUT_K,
+                max_tokens=MAX_TOKENS, seed=0, force=False) -> dict:
+    if os.path.exists(TRACE) and not force:
+        with np.load(TRACE) as z:
+            return dict(z)
+    model, params, task = get_reasoner()
+    engine = make_engine(model, params, max_tokens=max_tokens)
+    rng = np.random.default_rng(seed)
+    batch = task.serve_batch(rng, n_questions)
+    st = engine.start(jnp.asarray(batch["prompts"]), jnp.asarray(batch["prompt_len"]),
+                      jax.random.PRNGKey(seed))
+    st, trace = engine.reason_with_trace(
+        st, max_tokens=max_tokens, rollout_k=rollout_k, rollout_len=4,
+        answer_extract=ChainTask.extract_answer, confidence_len=5,
+    )
+    out = {
+        "answers_true": batch["answers"],
+        "k": batch["k"],
+        "n_tokens": np.stack([r["n_tokens"] for r in trace]),       # (L, B)
+        "due": np.stack([r["due"] for r in trace]),                 # (L, B)
+        "eat": np.stack([r["eat"] for r in trace]),                 # (L, B)
+        "answers": np.stack([r["answers"] for r in trace]),         # (L, K, B)
+        "confidence": np.stack([r["confidence"] for r in trace]),   # (L, B)
+    }
+    os.makedirs(ART, exist_ok=True)
+    np.savez(TRACE, **out)
+    return out
+
+
+# ----------------------------------------------------------------- replay
+
+
+def pass1_at_line(tr: dict, line: np.ndarray) -> np.ndarray:
+    """Pass@1(Avg@K) per question at (per-question) line indices."""
+    L, K, B = tr["answers"].shape
+    li = np.clip(line, 0, L - 1)
+    ans = tr["answers"][li, :, np.arange(B)]        # (B, K)
+    return (ans == tr["answers_true"][:, None]).mean(axis=1)
+
+
+def tokens_at_line(tr: dict, line: np.ndarray) -> np.ndarray:
+    L, B = tr["n_tokens"].shape
+    li = np.clip(line, 0, L - 1)
+    return tr["n_tokens"][li, np.arange(B)]
+
+
+def replay_ema_stop(tr: dict, signal: np.ndarray, alpha: float, delta: float,
+                    min_evals: int = 2) -> np.ndarray:
+    """Replay Alg. 1 (EMA variance threshold, de-biased) over a per-line
+    signal; returns per-question exit line index (L-1 if never)."""
+    L, B = signal.shape
+    m = np.zeros(B)
+    v = np.zeros(B)
+    n = np.zeros(B, int)
+    exit_line = np.full(B, L - 1)
+    done = np.zeros(B, bool)
+    for i in range(L):
+        use = tr["due"][i] & ~done
+        x = signal[i]
+        m_new = (1 - alpha) * m + alpha * x
+        v_new = (1 - alpha) * v + alpha * (x - m_new) ** 2
+        m = np.where(use, m_new, m)
+        v = np.where(use, v_new, v)
+        n = n + use.astype(int)
+        debias = 1 - (1 - alpha) ** np.maximum(n, 1)
+        fire = use & (n >= min_evals) & (v / debias < delta)
+        exit_line[fire & ~done] = i
+        done |= fire
+    return exit_line
+
+
+def replay_token_budget(tr: dict, budget: int) -> np.ndarray:
+    L, B = tr["n_tokens"].shape
+    exit_line = np.full(B, L - 1)
+    for b in range(B):
+        hits = np.nonzero(tr["n_tokens"][:, b] >= budget)[0]
+        if len(hits):
+            exit_line[b] = hits[0]
+    return exit_line
+
+
+def replay_ua_stop(tr: dict, k: int, max_unique: int, rng=None) -> np.ndarray:
+    """#UA@K (Alg. 3): exit when #unique among k of the K recorded rollouts
+    <= max_unique."""
+    L, K, B = tr["answers"].shape
+    rng = rng or np.random.default_rng(0)
+    sel = rng.choice(K, size=min(k, K), replace=False)
+    exit_line = np.full(B, L - 1)
+    done = np.zeros(B, bool)
+    for i in range(L):
+        ans = tr["answers"][i][sel]               # (k, B)
+        uniq = np.array([len(set(ans[:, b])) for b in range(B)])
+        fire = tr["due"][i] & (uniq <= max_unique) & ~done
+        exit_line[fire] = i
+        done |= fire
+    return exit_line
+
+
+def curve_auc(tokens: np.ndarray, acc: np.ndarray,
+              t_range: tuple | None = None) -> float:
+    """Area under the accuracy-vs-tokens curve, normalized over a token
+    range (larger = more efficient).  Pass a common ``t_range`` when
+    comparing methods (curves are step-interpolated and clamped to their
+    endpoint values outside their observed range)."""
+    order = np.argsort(tokens)
+    t, a = np.asarray(tokens, float)[order], np.asarray(acc, float)[order]
+    lo, hi = t_range if t_range is not None else (t[0], t[-1])
+    if hi == lo:
+        return float(a.mean())
+    grid = np.linspace(lo, hi, 256)
+    vals = np.interp(grid, t, a, left=a[0], right=a[-1])
+    return float(np.trapezoid(vals, grid) / (hi - lo))

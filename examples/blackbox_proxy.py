@@ -1,0 +1,88 @@
+"""Black-box early exiting (paper §4.2, Fig. 5): a PROXY model monitors the
+verbal reasoning stream of a different model and decides when to stop it.
+
+theta (the "API" reasoning model) = the trained tiny-reasoner.
+phi   (the local proxy)           = an independently-initialized copy trained
+with a different seed/steps — different weights, same tokenizer, mirroring
+the paper's Qwen-1.5B-monitors-Llama-70B setup at toy scale.
+
+The stream arrives in chunks; the proxy prefills each chunk into its own
+KV cache and evaluates EAT.  We also report the overlap headroom: proxy
+probe time vs generator chunk time (Fig. 5b's comparison).
+
+Run:  PYTHONPATH=src python examples/blackbox_proxy.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from examples.common import get_reasoner, make_engine
+from repro.configs.base import get_config
+from repro.core.eat import make_probe
+from repro.core.monitor import ReasoningMonitor
+from repro.core.stopping import EATStopper
+from repro.data.synthetic import ChainTask, Tokens
+from repro.models import Model
+from repro.serving.proxy import ProxyMonitor
+
+CHUNK = 8
+
+
+def main():
+    model, params, task = get_reasoner()
+    engine = make_engine(model, params, max_tokens=80)
+
+    # proxy: same family, different weights (quick fine-tune from scratch)
+    import examples.common as C
+    ckpt = C.CKPT
+    C.CKPT = ckpt.replace(".ckpt", "_proxy.ckpt")
+    proxy_model, proxy_params, _ = get_reasoner(train_steps=600)
+    C.CKPT = ckpt
+
+    monitor = ReasoningMonitor(
+        stopper=EATStopper(alpha=0.2, delta=1e-3),
+        probe=make_probe(Tokens.END_THINK, (Tokens.ANS,)),
+        newline_id=Tokens.NEWLINE, min_evals=2,
+    )
+    proxy = ProxyMonitor(model=proxy_model, params=proxy_params,
+                         monitor=monitor, capacity=192)
+
+    rng = np.random.default_rng(11)
+    batch = task.serve_batch(rng, 4)
+    print("difficulties:", batch["k"])
+
+    st = engine.start(jnp.asarray(batch["prompts"]), jnp.asarray(batch["prompt_len"]),
+                      jax.random.PRNGKey(0))
+    pst = proxy.start(jnp.asarray(batch["prompts"]), jnp.asarray(batch["prompt_len"]))
+
+    gen_times, stopped_at = [], np.full(4, -1)
+    for chunk_i in range(10):
+        t0 = time.perf_counter()
+        buf = []
+        for _ in range(CHUNK):                       # theta generates a chunk
+            st = engine._decode_fn(engine.params, st)
+            buf.append(np.asarray(st.last_token))
+        gen_times.append(time.perf_counter() - t0)
+        chunk = jnp.asarray(np.stack(buf, axis=1))   # (B, CHUNK)
+        pst = proxy.observe_chunk(pst, chunk, active=st.active)
+        stop = np.asarray(proxy.should_stop(pst))
+        newly = stop & (stopped_at < 0)
+        stopped_at[newly] = (chunk_i + 1) * CHUNK
+        st = st._replace(active=st.active & ~jnp.asarray(stop) & ~st.ended_think)
+        print(f"chunk {chunk_i}: EAT={np.asarray(pst['last_eat']).round(2)} "
+              f"stop={stop} gen={gen_times[-1]*1e3:.0f}ms "
+              f"probe={pst['probe_seconds'][-1]*1e3:.0f}ms")
+        if not bool(st.active.any()):
+            break
+
+    print(f"\nstopped_at (tokens): {stopped_at}")
+    print(f"mean generator chunk time: {np.mean(gen_times)*1e3:.1f} ms; "
+          f"mean proxy probe time: {np.mean(pst['probe_seconds'])*1e3:.1f} ms")
+    print("probe < chunk time -> monitoring hides behind generation "
+          "(paper Fig. 5b).")
+
+
+if __name__ == "__main__":
+    main()

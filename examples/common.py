@@ -1,0 +1,78 @@
+"""Shared helpers for the examples: get (train-if-missing) the synthetic
+reasoning model, build engines."""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core.eat import make_probe
+from repro.core.monitor import ReasoningMonitor
+from repro.core.stopping import EATStopper
+from repro.data.pipeline import train_batches
+from repro.data.synthetic import ChainTask, Tokens
+from repro.models import Model
+from repro.serving.engine import EngineConfig, ReasoningEngine
+from repro.serving.sampler import SamplerConfig
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import TrainConfig, init_train_state, make_train_step
+
+CKPT = os.path.join(os.path.dirname(__file__), "..", "artifacts", "tiny_reasoner.ckpt")
+
+
+def get_reasoner(train_steps: int = 1200, verbose: bool = True):
+    """Returns (model, params, task). Trains + checkpoints on first use."""
+    cfg = get_config("tiny-reasoner")
+    model = Model(cfg, attn_impl="xla")
+    task = ChainTask()
+    params_like = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    if os.path.exists(CKPT):
+        params = load_checkpoint(CKPT, params_like)
+        return model, params, task
+    if verbose:
+        print(f"training tiny-reasoner for {train_steps} steps (first run)...")
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    tcfg = TrainConfig(
+        opt=AdamWConfig(lr=1e-3, warmup_steps=50, total_steps=train_steps),
+        remat=False,
+    )
+    step_fn = jax.jit(make_train_step(model, tcfg), donate_argnums=0)
+    t0 = time.time()
+    for i, batch in zip(range(train_steps), train_batches(task, 64, seed=0)):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        state, metrics = step_fn(state, batch)
+        if verbose and i % 200 == 0:
+            print(f"  step {i}: loss={float(metrics['loss']):.3f} "
+                  f"acc={float(metrics['accuracy']):.3f} ({time.time()-t0:.0f}s)")
+    save_checkpoint(CKPT, state.params)
+    return model, state.params, task
+
+
+def make_engine(model, params, *, alpha=0.2, delta=1e-3, max_tokens=110,
+                temperature=0.6, min_evals=2) -> ReasoningEngine:
+    ecfg = EngineConfig(
+        max_reasoning_tokens=max_tokens, capacity=192,
+        pad_id=Tokens.PAD, end_think_id=Tokens.END_THINK,
+        newline_id=Tokens.NEWLINE, eos_id=Tokens.EOS,
+        sampler=SamplerConfig(temperature=temperature, top_p=0.95),
+    )
+    monitor = ReasoningMonitor(
+        stopper=EATStopper(alpha=alpha, delta=delta),
+        probe=make_probe(Tokens.END_THINK, (Tokens.ANS,)),
+        newline_id=Tokens.NEWLINE,
+        min_evals=min_evals,
+    )
+    return ReasoningEngine(model, params, ecfg, monitor)
+
+
+def pass_at_1(engine, state, answers: np.ndarray, k: int, rng) -> np.ndarray:
+    """Pass@1(Avg@k) per sequence (paper Eq. 9)."""
+    rolls = engine.rollout_answers(state, k, n_tokens=4, rng=rng)   # (k,B,4)
+    got = np.stack([ChainTask.extract_answer(np.asarray(rolls[i]))
+                    for i in range(k)])                              # (k,B)
+    return (got == answers[None, :]).mean(axis=0)

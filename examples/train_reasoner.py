@@ -1,0 +1,30 @@
+"""Training driver: train the synthetic reasoning model from scratch.
+
+This exercises the full training substrate (data pipeline -> pjit train
+step -> AdamW -> checkpointing).  The serving examples load the resulting
+checkpoint.  On the production mesh the same code path trains the assigned
+architectures (see repro/launch/train.py); here it runs the tiny config on
+CPU in a few minutes.
+
+Run:  PYTHONPATH=src python examples/train_reasoner.py [--steps 1200]
+"""
+import argparse
+
+from examples.common import CKPT, get_reasoner
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=1200)
+    args = ap.parse_args()
+    import os
+
+    if os.path.exists(CKPT):
+        print(f"checkpoint already at {CKPT}; delete it to retrain")
+        return
+    get_reasoner(train_steps=args.steps)
+    print(f"saved {CKPT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Config registry — importing this package registers all architectures."""
+from repro.configs import (  # noqa: F401
+    codeqwen1p5_7b,
+    deepseek_moe_16b,
+    deepseek_v2_236b,
+    gemma_2b,
+    gemma_7b,
+    mamba2_2p7b,
+    paper_native,
+    qwen2_vl_7b,
+    qwen3_1p7b,
+    seamless_m4t_large_v2,
+    tiny,
+    zamba2_2p7b,
+)
+from repro.configs.base import (  # noqa: F401
+    INPUT_SHAPES,
+    REGISTRY,
+    InputShape,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    get_config,
+    list_configs,
+)
+
+ASSIGNED_ARCHS = [
+    "deepseek-v2-236b",
+    "mamba2-2.7b",
+    "codeqwen1.5-7b",
+    "seamless-m4t-large-v2",
+    "gemma-2b",
+    "deepseek-moe-16b",
+    "zamba2-2.7b",
+    "qwen3-1.7b",
+    "qwen2-vl-7b",
+    "gemma-7b",
+]

@@ -1,0 +1,290 @@
+"""Model / run configuration system.
+
+Every architecture is described by a single frozen ``ModelConfig`` dataclass.
+Configs are registered by id in ``REGISTRY`` (one module per assigned
+architecture under ``repro/configs``) and selected with ``--arch <id>`` by the
+launchers.  ``reduced()`` derives the CPU-smoke-test variant of the same
+family (≤2 layers, d_model ≤ 512, ≤4 experts) mandated for per-arch smoke
+tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field, replace
+from typing import Literal, Sequence
+
+ArchType = Literal["dense", "moe", "ssm", "hybrid", "encdec", "vlm"]
+Activation = Literal["silu", "geglu", "gelu"]
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts sub-config (DeepSeek-style fine-grained MoE)."""
+
+    n_routed: int = 0                 # number of routed experts
+    n_shared: int = 0                 # always-on shared experts
+    top_k: int = 0                    # experts per token
+    d_expert: int = 0                 # hidden dim of each expert FFN
+    first_k_dense: int = 1            # leading layers that use a dense FFN
+    dense_d_ff: int = 0               # d_ff of those dense layers
+    capacity_factor: float = 1.25     # expert-parallel capacity factor
+    router_aux_weight: float = 0.001  # load-balance aux loss weight
+    routed_scale: float = 1.0         # scaling on routed output (DeepSeek uses 1.0)
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (SSD) sub-config."""
+
+    d_state: int = 128
+    head_dim: int = 64                # P in SSD
+    expand: int = 2                   # d_inner = expand * d_model
+    chunk: int = 128                  # SSD chunk length
+    conv_width: int = 4
+    n_groups: int = 1                 # B/C groups (like GQA for SSM)
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 multi-head latent attention sub-config."""
+
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "tiny"
+    arch_type: ArchType = "dense"
+    source: str = ""                  # citation: arXiv id / model card
+
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 0                 # 0 -> d_model // n_heads
+    d_ff: int = 512
+    vocab: int = 256
+
+    activation: Activation = "silu"
+    qk_norm: bool = False
+    attn_bias: bool = False           # qwen1.5-style qkv bias
+    tie_embeddings: bool = False
+    embed_scale: bool = False         # gemma: scale embeddings by sqrt(d)
+    rmsnorm_one_plus: bool = False    # gemma: (1 + w) * normed
+    norm_eps: float = 1e-6
+    rope_theta: float = 10_000.0
+    mrope_sections: tuple[int, ...] = ()   # qwen2-vl M-RoPE (t, h, w)
+    logit_softcap: float = 0.0
+
+    # attention variants
+    sliding_window: int = 0           # 0 = full attention; >0 = SWA window
+    attn_temperature: float = 0.0     # 0 -> 1/sqrt(head_dim)
+
+    moe: MoEConfig | None = None
+    ssm: SSMConfig | None = None
+    mla: MLAConfig | None = None
+
+    # hybrid: pattern of block kinds, tiled to n_layers. e.g. Zamba2:
+    # ("ssm",)*5 + ("shared_attn",) repeated.  "shared_attn" blocks share one
+    # parameter set across all their occurrences.
+    hybrid_pattern: tuple[str, ...] = ()
+
+    # encoder-decoder (audio): encoder layer count; encoder consumes stub
+    # frame embeddings of dim d_model.
+    n_encoder_layers: int = 0
+    encoder_len: int = 1024           # stub frontend frames per example
+
+    # vlm: number of stub image-patch embeddings prepended to the stream
+    n_image_patches: int = 0
+
+    dtype: str = "bfloat16"
+    # --------------------------------------------------------------
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding-table vocab padded to a multiple of 256 so the vocab dim
+        shards over a 16-wide model axis and tiles to the 128 TPU lane width
+        (e.g. mamba2's 50280 -> 50432).  Logits beyond ``vocab`` are masked
+        in loss / sampling / entropy."""
+        return -(-self.vocab // 256) * 256
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def is_causal_lm(self) -> bool:
+        return self.arch_type in ("dense", "moe", "ssm", "hybrid", "vlm")
+
+    def block_kinds(self) -> tuple[str, ...]:
+        """Per-layer block kind sequence."""
+        if self.arch_type == "ssm":
+            return ("ssm",) * self.n_layers
+        if self.arch_type == "hybrid":
+            pat = self.hybrid_pattern or ("ssm", "ssm", "ssm", "ssm", "ssm", "shared_attn")
+            reps = math.ceil(self.n_layers / len(pat))
+            return (pat * reps)[: self.n_layers]
+        return ("attn",) * self.n_layers
+
+    def moe_layer_mask(self) -> tuple[bool, ...]:
+        """True where the FFN is MoE (False = dense FFN)."""
+        if self.moe is None or self.moe.n_routed == 0:
+            return (False,) * self.n_layers
+        return tuple(i >= self.moe.first_k_dense for i in range(self.n_layers))
+
+    # ---- parameter count (for roofline MODEL_FLOPS) -----------------
+    def param_count(self, active_only: bool = False) -> int:
+        d, hd = self.d_model, self.resolved_head_dim
+        n_q, n_kv = self.n_heads, self.n_kv_heads
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        per_attn = d * (n_q * hd) + 2 * d * (n_kv * hd) + (n_q * hd) * d
+        if self.mla is not None:
+            m = self.mla
+            qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+            per_attn = (
+                d * m.q_lora_rank + m.q_lora_rank * n_q * qk_hd          # q down/up
+                + d * (m.kv_lora_rank + m.qk_rope_head_dim)              # kv down (+rope k)
+                + m.kv_lora_rank * n_q * (m.qk_nope_head_dim + m.v_head_dim)
+                + n_q * m.v_head_dim * d                                  # o proj
+            )
+        ffn_mult = 3 if self.activation in ("silu", "geglu") else 2
+        per_dense_ffn = ffn_mult * d * self.d_ff
+
+        def moe_ffn(active: bool) -> int:
+            mo = self.moe
+            n_e = (mo.top_k if active else mo.n_routed) + mo.n_shared
+            return ffn_mult * d * mo.d_expert * n_e + d * mo.n_routed  # + router
+
+        def ssm_params() -> int:
+            s = self.ssm
+            d_in = s.expand * d
+            nh = d_in // s.head_dim
+            bc = 2 * s.n_groups * s.d_state
+            return d * (2 * d_in + bc + nh) + (d_in + bc) * s.conv_width + d_in * d + 2 * nh
+
+        total = emb
+        kinds = self.block_kinds()
+        moe_mask = self.moe_layer_mask()
+        shared_attn_counted = False
+        for i, kind in enumerate(kinds):
+            if kind == "ssm":
+                total += ssm_params() + d  # + norm
+            elif kind == "shared_attn":
+                if not shared_attn_counted:
+                    # Zamba2 shared block consumes concat(h, emb0): 2d input
+                    total += 2 * d * (n_q * hd) * 1 + 2 * 2 * d * (n_kv * hd) + (n_q * hd) * d
+                    total += ffn_mult * d * self.d_ff + 2 * d
+                    shared_attn_counted = True
+            else:
+                total += per_attn + 2 * d
+                if self.moe is not None and moe_mask[i]:
+                    if self.moe.dense_d_ff and i < self.moe.first_k_dense:
+                        total += ffn_mult * d * self.moe.dense_d_ff
+                    else:
+                        total += moe_ffn(active_only)
+                elif self.moe is not None and not moe_mask[i]:
+                    dff = self.moe.dense_d_ff or self.d_ff
+                    total += ffn_mult * d * dff
+                else:
+                    total += per_dense_ffn
+        # encoder (audio)
+        if self.n_encoder_layers:
+            total += self.n_encoder_layers * (per_attn + per_dense_ffn + 2 * d)
+            # decoder cross attention
+            total += self.n_layers * (per_attn + d)
+        return total
+
+    # ---- reduced variant for CPU smoke tests -------------------------
+    def reduced(self) -> "ModelConfig":
+        kw: dict = dict(
+            name=self.name + "-reduced",
+            n_layers=2,
+            d_model=min(self.d_model, 128),
+            vocab=min(self.vocab, 512),
+        )
+        hd = 32
+        n_heads = max(2, min(self.n_heads, 4))
+        n_kv = max(1, min(self.n_kv_heads, n_heads))
+        kw.update(n_heads=n_heads, n_kv_heads=n_kv, head_dim=hd, d_ff=min(self.d_ff, 256) or 256)
+        if self.moe is not None:
+            kw["moe"] = replace(
+                self.moe,
+                n_routed=min(self.moe.n_routed, 4),
+                n_shared=min(self.moe.n_shared, 1),
+                top_k=min(self.moe.top_k, 2),
+                d_expert=64,
+                first_k_dense=min(self.moe.first_k_dense, 1),
+                dense_d_ff=128 if self.moe.dense_d_ff else 0,
+            )
+        if self.ssm is not None:
+            kw["ssm"] = replace(self.ssm, d_state=16, head_dim=16, chunk=16)
+        if self.mla is not None:
+            kw["mla"] = MLAConfig(
+                kv_lora_rank=32, q_lora_rank=48, qk_nope_head_dim=32,
+                qk_rope_head_dim=16, v_head_dim=32,
+            )
+        if self.hybrid_pattern:
+            kw["n_layers"] = max(2, len(self.hybrid_pattern))
+        if self.n_encoder_layers:
+            kw["n_encoder_layers"] = 2
+            kw["encoder_len"] = 32
+        if self.n_image_patches:
+            kw["n_image_patches"] = 8
+        if self.mrope_sections:
+            kw["mrope_sections"] = (4, 6, 6)  # sums to head_dim // 2 = 16
+        kw["dtype"] = "float32"
+        return replace(self, **kw)
+
+
+# ----------------------------------------------------------------------
+# registry
+REGISTRY: dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    if cfg.name in REGISTRY:
+        raise ValueError(f"duplicate config {cfg.name}")
+    REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    # import side-effect registration
+    from repro import configs as _  # noqa: F401
+
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def list_configs() -> list[str]:
+    from repro import configs as _  # noqa: F401
+
+    return sorted(REGISTRY)
+
+
+# ----------------------------------------------------------------------
+# input shapes (assigned)
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+INPUT_SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}

@@ -1,0 +1,41 @@
+"""Configs native to the EAT paper's own experiments.
+
+``eat-paper-8b``: DeepSeek-R1-0528-Qwen3-8B-shaped reasoning model — the
+paper's main reasoning model (Fig. 1-4).  ``eat-proxy-1.5b``:
+DeepSeek-R1-Distill-Qwen-1.5B-shaped proxy for the black-box setting
+(Fig. 3, bottom-left).
+"""
+from repro.configs.base import ModelConfig, register
+
+PAPER_8B = register(
+    ModelConfig(
+        name="eat-paper-8b",
+        arch_type="dense",
+        source="hf:deepseek-ai/DeepSeek-R1-0528-Qwen3-8B",
+        n_layers=36,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=12288,
+        vocab=151_936,
+        qk_norm=True,
+        rope_theta=1_000_000.0,
+    )
+)
+
+PAPER_PROXY_1P5B = register(
+    ModelConfig(
+        name="eat-proxy-1.5b",
+        arch_type="dense",
+        source="hf:deepseek-ai/DeepSeek-R1-Distill-Qwen-1.5B",
+        n_layers=28,
+        d_model=1536,
+        n_heads=12,
+        n_kv_heads=2,
+        head_dim=128,
+        d_ff=8960,
+        vocab=151_936,
+        attn_bias=True,
+    )
+)

@@ -1,0 +1,25 @@
+"""SeamlessM4T-large v2 — encoder-decoder, audio (text decoder backbone).
+[arXiv:2308.11596]
+
+24L (each side) d_model=1024, 16 heads, d_ff=8192, vocab=256206.  The speech
+frontend (mel + conformer conv) is a STUB: ``input_specs`` provides
+precomputed 1024-dim frame embeddings (encoder_len frames).
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="seamless-m4t-large-v2",
+        arch_type="encdec",
+        source="arXiv:2308.11596",
+        n_layers=24,            # decoder layers
+        n_encoder_layers=24,
+        encoder_len=1024,       # stub frontend frames
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=8192,
+        vocab=256_206,
+        activation="gelu",
+    )
+)

@@ -1,0 +1,26 @@
+"""Zamba2-2.7B — hybrid: Mamba2 backbone + shared attention block.
+[arXiv:2411.15242]
+
+54 Mamba2 layers d_model=2560 (ssm_state=64) with one SHARED
+attention+MLP block (32 heads, d_ff=10240) applied every 6th position
+(9 applications). The shared block consumes concat(hidden, embed0) (2*d)
+per the paper; per-depth LoRA deltas are omitted (see DESIGN.md §5).
+"""
+from repro.configs.base import ModelConfig, SSMConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="zamba2-2.7b",
+        arch_type="hybrid",
+        source="arXiv:2411.15242",
+        n_layers=54,
+        d_model=2560,
+        n_heads=32,
+        n_kv_heads=32,
+        head_dim=80,
+        d_ff=10240,
+        vocab=32_000,
+        ssm=SSMConfig(d_state=64, head_dim=64, expand=2, chunk=128, conv_width=4),
+        hybrid_pattern=("ssm", "ssm", "ssm", "ssm", "ssm", "shared_attn"),
+    )
+)

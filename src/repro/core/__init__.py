@@ -1,0 +1,13 @@
+# The paper's primary contribution: the EAT early-exit signal and its
+# variance-threshold stopping rule, plus the baselines it is compared to.
+from repro.core.eat import ProbeSpec, entropy_of_logits, eval_eat, make_probe  # noqa: F401
+from repro.core.ema import EMAState, ema_debiased_var, ema_init, ema_update  # noqa: F401
+from repro.core.monitor import MonitorState, ReasoningMonitor  # noqa: F401
+from repro.core.stopping import (  # noqa: F401
+    ConfidenceStopper,
+    EATStopper,
+    GiveUpStopper,
+    TokenBudgetStopper,
+    UniqueAnswerStopper,
+    confidence_from_logprobs,
+)

@@ -1,0 +1,51 @@
+"""Exponential-moving-average mean/variance tracker (paper Eqs. 7-8 + the
+de-biasing of Alg. 1 line 8).
+
+    M_n = (1-a) M_{n-1} + a x_n
+    V_n = (1-a) V_{n-1} + a (x_n - M_n)^2
+    V'_n = V_n / (1 - (1-a)^n)          (initialization de-bias)
+
+Pure-functional and vectorized over a batch of trackers (one per in-flight
+sequence), so it runs inside jitted decode loops.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EMAState(NamedTuple):
+    mean: jax.Array     # (B,)
+    var: jax.Array      # (B,)
+    count: jax.Array    # (B,) int32 — updates seen
+
+
+def ema_init(batch: int) -> EMAState:
+    return EMAState(
+        mean=jnp.zeros((batch,), jnp.float32),
+        var=jnp.zeros((batch,), jnp.float32),
+        count=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def ema_update(state: EMAState, x: jax.Array, alpha: float,
+               active: jax.Array | None = None) -> EMAState:
+    """One update per sequence; sequences with active=False are frozen."""
+    m = (1.0 - alpha) * state.mean + alpha * x
+    v = (1.0 - alpha) * state.var + alpha * (x - m) ** 2
+    c = state.count + 1
+    if active is not None:
+        m = jnp.where(active, m, state.mean)
+        v = jnp.where(active, v, state.var)
+        c = jnp.where(active, c, state.count)
+    return EMAState(mean=m, var=v, count=c)
+
+
+def ema_debiased_var(state: EMAState, alpha: float) -> jax.Array:
+    """V'_n = V_n / (1 - (1-a)^n); inf where no updates yet (never triggers
+    a below-threshold stop before the first EAT evaluation)."""
+    denom = 1.0 - (1.0 - alpha) ** jnp.maximum(state.count, 1).astype(jnp.float32)
+    v = state.var / jnp.maximum(denom, 1e-12)
+    return jnp.where(state.count > 0, v, jnp.inf)

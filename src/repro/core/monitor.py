@@ -1,0 +1,70 @@
+"""Reasoning-stream monitor: evaluation scheduling + stopper wiring.
+
+The paper evaluates EAT every time the model emits a paragraph break
+("\\n\\n" — one token in our synthetic tokenizer) and notes (App. G) that
+every-S-tokens scheduling works equally well.  The monitor tracks, per
+sequence, when an evaluation is *due*, feeds the stopper, and exposes the
+combined exit decision.  It is jit-compatible: all state is arrays, all
+decisions are masks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.eat import ProbeSpec
+from repro.core.stopping import EATState, EATStopper
+
+
+class MonitorState(NamedTuple):
+    stop_state: EATState
+    since_eval: jax.Array      # (B,) tokens since last evaluation
+    n_evals: jax.Array         # (B,) evaluations so far
+    stop_flag: jax.Array       # (B,) bool latched exit decision
+
+
+@dataclasses.dataclass(frozen=True)
+class ReasoningMonitor:
+    stopper: EATStopper
+    probe: ProbeSpec
+    schedule: Literal["newline", "every_n"] = "newline"
+    newline_id: int = -1              # token id of "\n\n" (schedule=newline)
+    every_n: int = 100                # schedule=every_n
+    min_evals: int = 2                # don't stop before this many evals
+
+    def init(self, batch: int) -> MonitorState:
+        return MonitorState(
+            stop_state=self.stopper.init(batch),
+            since_eval=jnp.zeros((batch,), jnp.int32),
+            n_evals=jnp.zeros((batch,), jnp.int32),
+            stop_flag=jnp.zeros((batch,), bool),
+        )
+
+    def due(self, state: MonitorState, new_token: jax.Array) -> jax.Array:
+        """(B,) — which sequences need an EAT evaluation after this token."""
+        if self.schedule == "newline":
+            return new_token == self.newline_id
+        return (state.since_eval + 1) >= self.every_n
+
+    def update(
+        self,
+        state: MonitorState,
+        eat: jax.Array,           # (B,) EAT values (computed for all seqs)
+        due: jax.Array,           # (B,) which seqs consume the evaluation
+        active: jax.Array,        # (B,) still-reasoning mask
+    ) -> MonitorState:
+        use = due & active
+        stop_state = self.stopper.update(state.stop_state, eat, active=use)
+        n_evals = state.n_evals + use.astype(jnp.int32)
+        since = jnp.where(use, 0, state.since_eval + active.astype(jnp.int32))
+        should = self.stopper.should_stop(stop_state) & (n_evals >= self.min_evals)
+        stop_flag = state.stop_flag | (should & active)
+        return MonitorState(stop_state, since, n_evals, stop_flag)
+
+    def tick_no_eval(self, state: MonitorState, active: jax.Array) -> MonitorState:
+        return state._replace(
+            since_eval=state.since_eval + active.astype(jnp.int32)
+        )

@@ -1,0 +1,175 @@
+"""Early-exit stopping rules (paper Algs. 1-3 + the confidence baseline).
+
+All stoppers share a functional interface usable inside jitted loops:
+
+    state  = stopper.init(batch)
+    state  = stopper.update(state, signal, active)   # per evaluation point
+    stop   = stopper.should_stop(state)              # (B,) bool
+
+* ``EATStopper``        — Alg. 1: EMA variance of EAT below delta.
+* ``TokenBudgetStopper``— Alg. 2: fixed per-question token limit T.
+* ``UniqueAnswerStopper``— Alg. 3 (#UA@K): number of distinct answers among
+  K forced rollouts <= Delta.  The rollouts themselves are produced by the
+  engine (expensive — that is the paper's point, Fig. 6).
+* ``ConfidenceStopper`` — Yang et al. 2025b (Eq. 16): EMA-var of the
+  length-normalized likelihood of a greedy T'-token rollout.  We monitor it
+  with the same EMA machinery; the engine supplies the confidence signal.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ema import EMAState, ema_debiased_var, ema_init, ema_update
+
+
+class EATState(NamedTuple):
+    ema: EMAState
+    last: jax.Array       # (B,) last signal value (for logging)
+
+
+@dataclasses.dataclass(frozen=True)
+class EATStopper:
+    """Alg. 1: stop when the de-biased EMA variance of EAT < delta."""
+
+    alpha: float = 0.2
+    delta: float = 1e-3
+
+    def init(self, batch: int) -> EATState:
+        return EATState(ema=ema_init(batch), last=jnp.zeros((batch,), jnp.float32))
+
+    def update(self, state: EATState, eat: jax.Array, active=None) -> EATState:
+        ema = ema_update(state.ema, eat, self.alpha, active)
+        last = eat if active is None else jnp.where(active, eat, state.last)
+        return EATState(ema=ema, last=last)
+
+    def debiased_var(self, state: EATState) -> jax.Array:
+        return ema_debiased_var(state.ema, self.alpha)
+
+    def should_stop(self, state: EATState) -> jax.Array:
+        return self.debiased_var(state) < self.delta
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenBudgetStopper:
+    """Alg. 2: stop at a fixed reasoning-token budget T (plus natural
+    ``</think>`` emission, which the engine checks regardless of stopper)."""
+
+    budget: int = 10_000
+
+    def init(self, batch: int):
+        return jnp.zeros((batch,), jnp.int32)     # tokens generated
+
+    def update(self, state, n_new_tokens: jax.Array, active=None):
+        nxt = state + n_new_tokens
+        return jnp.where(active, nxt, state) if active is not None else nxt
+
+    def should_stop(self, state) -> jax.Array:
+        return state >= self.budget
+
+
+class UAState(NamedTuple):
+    n_unique: jax.Array    # (B,) int32 — last measured #UA@K
+
+
+@dataclasses.dataclass(frozen=True)
+class UniqueAnswerStopper:
+    """Alg. 3: stop when #unique answers among K rollouts <= Delta."""
+
+    k: int = 16
+    max_unique: int = 1
+
+    def init(self, batch: int) -> UAState:
+        return UAState(n_unique=jnp.full((batch,), 2**30, jnp.int32))
+
+    def update(self, state: UAState, answers: jax.Array, active=None) -> UAState:
+        """answers: (B, K) int32 canonical answer ids from K forced rollouts."""
+        srt = jnp.sort(answers, axis=-1)
+        uniq = 1 + (srt[:, 1:] != srt[:, :-1]).sum(-1)
+        if active is not None:
+            uniq = jnp.where(active, uniq, state.n_unique)
+        return UAState(n_unique=uniq.astype(jnp.int32))
+
+    def should_stop(self, state: UAState) -> jax.Array:
+        return state.n_unique <= self.max_unique
+
+
+@dataclasses.dataclass(frozen=True)
+class ConfidenceStopper:
+    """Yang et al. 2025b: confidence = exp(mean log p) over a greedy T'-token
+    forced rollout (Eq. 16).  Stop when its EMA variance stabilizes (same
+    rule shape as EAT so Fig. 4's comparison is apples-to-apples)."""
+
+    alpha: float = 0.2
+    delta: float = 1e-4
+    rollout_len: int = 5
+
+    def init(self, batch: int) -> EATState:
+        return EATState(ema=ema_init(batch), last=jnp.zeros((batch,), jnp.float32))
+
+    def update(self, state: EATState, confidence: jax.Array, active=None) -> EATState:
+        ema = ema_update(state.ema, confidence, self.alpha, active)
+        last = confidence if active is None else jnp.where(active, confidence, state.last)
+        return EATState(ema=ema, last=last)
+
+    def should_stop(self, state: EATState) -> jax.Array:
+        return ema_debiased_var(state.ema, self.alpha) < self.delta
+
+
+class GiveUpState(NamedTuple):
+    ema: EMAState
+    best_var: jax.Array        # (B,) lowest de-biased variance seen so far
+    stall_streak: jax.Array    # (B,) consecutive non-improving high-var evals
+
+
+@dataclasses.dataclass(frozen=True)
+class GiveUpStopper:
+    """BEYOND-PAPER (the paper's §6 'lower-threshold mechanism' future work):
+    abandon reasoning when progress stalls.  On unsolvable questions (App.
+    I.4) EAT never stabilizes and plain Alg. 1 burns the whole budget; here
+    we track the best (lowest) de-biased variance reached so far and give up
+    after ``patience`` consecutive evaluations that are BOTH above the
+    stabilization ceiling AND fail to improve on the best by ``improve_tol``
+    — the initial descent keeps setting new minima, so it never counts as a
+    stall.  Compose with EATStopper: exit = stabilized OR gave up.
+    """
+
+    alpha: float = 0.2
+    ceiling: float = 0.05
+    patience: int = 8
+    min_evals: int = 6
+    improve_tol: float = 0.05      # relative improvement that resets the stall
+
+    def init(self, batch: int) -> GiveUpState:
+        return GiveUpState(
+            ema=ema_init(batch),
+            best_var=jnp.full((batch,), jnp.inf, jnp.float32),
+            stall_streak=jnp.zeros((batch,), jnp.int32),
+        )
+
+    def update(self, state: GiveUpState, eat: jax.Array, active=None) -> GiveUpState:
+        ema = ema_update(state.ema, eat, self.alpha, active)
+        var = ema_debiased_var(ema, self.alpha)
+        improving = var < state.best_var * (1.0 - self.improve_tol)
+        stalled = (var > self.ceiling) & ~improving & (ema.count >= self.min_evals)
+        streak = jnp.where(stalled, state.stall_streak + 1,
+                           jnp.zeros_like(state.stall_streak))
+        best = jnp.minimum(state.best_var, var)
+        if active is not None:
+            streak = jnp.where(active, streak, state.stall_streak)
+            best = jnp.where(active, best, state.best_var)
+        return GiveUpState(ema=ema, best_var=best, stall_streak=streak)
+
+    def should_stop(self, state: GiveUpState) -> jax.Array:
+        return state.stall_streak >= self.patience
+
+
+def confidence_from_logprobs(logprobs: jax.Array, mask=None) -> jax.Array:
+    """(B, T') per-token log p of a greedy rollout -> exp(mean)."""
+    if mask is None:
+        return jnp.exp(logprobs.mean(-1))
+    s = (logprobs * mask).sum(-1) / jnp.maximum(mask.sum(-1), 1.0)
+    return jnp.exp(s)

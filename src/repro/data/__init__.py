@@ -1,0 +1,1 @@
+from repro.data.synthetic import ChainTask, Tokens  # noqa: F401

@@ -1,0 +1,28 @@
+"""Host data pipeline: batch iterator + device placement with shardings."""
+from __future__ import annotations
+
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import ChainTask
+from repro.models.model import Model
+from repro.training.train_loop import batch_pspecs
+
+
+def train_batches(task: ChainTask, batch_size: int, seed: int = 0) -> Iterator[dict]:
+    rng = np.random.default_rng(seed)
+    while True:
+        yield task.batch(rng, batch_size)
+
+
+def device_put_batch(model: Model, batch: dict) -> dict:
+    ctx = model.ctx
+    if ctx.mesh is None:
+        return jax.tree_util.tree_map(jnp.asarray, batch)
+    specs = batch_pspecs(model, batch)
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(jnp.asarray(x), ctx.sharding(s)), batch, specs
+    )

@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the EAT serving hot spots (see DESIGN.md §8):
+#   entropy_probe    — fused hidden x vocab -> online next-token entropy
+#                      (the EAT signal itself, Eq. 5 of the paper)
+#   flash_attention  — prefill/train attention, explicit-position masking
+#   decode_attention — flash-decode over the KV cache (serve_step)
+#   ssd_scan         — Mamba2 SSD chunk scan (mamba2/zamba2 archs)
+# Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+# wrapper with XLA fallback), ref.py (pure-jnp oracle).

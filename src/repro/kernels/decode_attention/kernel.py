@@ -1,0 +1,120 @@
+"""Pallas TPU flash-decode kernel (serve_step attention).
+
+Decode reads the whole KV cache for m<=8 new query positions: the work is
+KV-bound, so unlike the prefill kernel the grid parallelizes over
+(batch, kv-head, kv-tile) and processes *all* q rows belonging to a kv head
+at once — the q tile is (m * group_size, Dk), i.e. every q head in the GQA
+group x every new position, which keeps the MXU busy on one (bkv, Dk) x
+(Dk, m*g) matmul per tile instead of m separate vector products.
+
+Ring-buffer caches (sliding window) are supported for free: masking uses
+the explicit per-slot position array, so slot order never matters.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, scale, window, n_kv_tiles, rows):
+    kv_j = pl.program_id(2)
+
+    @pl.when(kv_j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (rows, Dk)  rows = m*g
+    k = k_ref[0, :, 0, :].astype(jnp.float32)    # (bkv, Dk)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)    # (bkv, Dv)
+    qp = qp_ref[0]                               # (rows,)
+    kp = kp_ref[0]                               # (bkv,)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (rows, bkv)
+    valid = (kp[None, :] >= 0) & (kp[None, :] <= qp[:, None])
+    if window:
+        valid &= (qp[:, None] - kp[None, :]) < window
+    s = jnp.where(valid, s, _NEG_INF)
+
+    m_prev, l_prev = m_scr[...], l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.where(valid, jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+
+    @pl.when(kv_j == n_kv_tiles - 1)
+    def _emit():
+        l = l_scr[...]
+        out = jnp.where(l[:, None] > 0, acc_scr[...] / jnp.maximum(l[:, None], 1e-30), 0.0)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def decode_attention_pallas(
+    q: jax.Array,      # (B, m, Hq, Dk)   m small (decode/probe positions)
+    k: jax.Array,      # (B, C, Hkv, Dk)  cache
+    v: jax.Array,      # (B, C, Hkv, Dv)
+    q_pos: jax.Array,  # (B, m)
+    kv_pos: jax.Array, # (B, C)
+    *,
+    window: int = 0,
+    scale: float | None = None,
+    block_kv: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, m, Hq, Dk = q.shape
+    C, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    g = Hq // Hkv
+    rows = m * g
+    scale = scale if scale is not None else 1.0 / (Dk ** 0.5)
+    block_kv = min(block_kv, C)
+
+    pad_kv = (-C) % block_kv
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad_kv)), constant_values=-1)
+    Cp = k.shape[1]
+    n_kv = Cp // block_kv
+
+    # regroup q to (B, Hkv, m*g, Dk): row r = position (r // g), head-in-group (r % g)
+    qg = q.reshape(B, m, Hkv, g, Dk).transpose(0, 2, 1, 3, 4).reshape(B, Hkv, rows, Dk)
+    qpg = jnp.broadcast_to(q_pos[:, :, None], (B, m, g)).reshape(B, rows)
+
+    grid = (B, Hkv, n_kv)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, window=window,
+                          n_kv_tiles=n_kv, rows=rows),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, rows), lambda b, h, j: (b, 0)),
+            pl.BlockSpec((1, block_kv), lambda b, h, j: (b, j)),
+            pl.BlockSpec((1, 1, rows, Dk), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_kv, 1, Dk), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, block_kv, 1, Dv), lambda b, h, j: (b, j, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rows, Dv), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, rows, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rows,), jnp.float32),
+            pltpu.VMEM((rows,), jnp.float32),
+            pltpu.VMEM((rows, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qpg, kv_pos, qg, k, v)
+    # back to (B, m, Hq, Dv)
+    return out.reshape(B, Hkv, m, g, Dv).transpose(0, 2, 1, 3, 4).reshape(B, m, Hq, Dv)

@@ -1,0 +1,36 @@
+"""Dispatching wrapper for flash-decode attention.
+
+Semantics == ``flash_attention.ops.attention`` with causal=True; only the
+execution strategy differs (KV-tile-parallel, q heads grouped per kv head).
+The XLA fallback simply reuses the chunked attention implementation.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.ops import attention as _attention
+
+
+def decode_attention(
+    q: jax.Array,       # (B, m, Hq, Dk)
+    k: jax.Array,       # (B, C, Hkv, Dk)
+    v: jax.Array,       # (B, C, Hkv, Dv)
+    q_pos: jax.Array,   # (B, m)
+    kv_pos: jax.Array,  # (B, C)
+    *,
+    window: int = 0,
+    scale: float | None = None,
+    impl: str = "auto",
+    interpret: bool = False,
+) -> jax.Array:
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "pallas":
+        from repro.kernels.decode_attention.kernel import decode_attention_pallas
+
+        return decode_attention_pallas(
+            q, k, v, q_pos, kv_pos, window=window, scale=scale, interpret=interpret
+        )
+    return _attention(
+        q, k, v, q_pos, kv_pos, causal=True, window=window, scale=scale, impl=impl
+    )

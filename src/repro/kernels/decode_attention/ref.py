@@ -1,0 +1,4 @@
+"""Oracle for flash-decode: identical semantics to flash_attention's ref
+(explicit positions, GQA, Dv != Dk) — re-exported so the decode kernel has
+its own named oracle for shape-sweep tests."""
+from repro.kernels.flash_attention.ref import attention_ref as decode_attention_ref  # noqa: F401

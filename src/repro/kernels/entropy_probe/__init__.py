@@ -1,0 +1,1 @@
+from repro.kernels.entropy_probe.ops import next_token_entropy  # noqa: F401

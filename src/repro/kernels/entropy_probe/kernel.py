@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: fused unembedding + online next-token entropy.
+
+The EAT probe (paper §4.1) needs H(softmax(h W)) for a handful of rows but
+the *full* vocabulary (paper App. H computes entropy "over the logits of the
+full vocabulary", up to 256k columns).  Materializing (B, V) logits in HBM
+makes the probe memory-bound: 2·B·V·2 bytes of logit traffic per
+evaluation.  This kernel streams vocab tiles of W through VMEM and keeps
+FlashAttention-style running accumulators
+
+    m  = running max(logit)
+    Z  = sum exp(logit - m)
+    T  = sum exp(logit - m) * logit
+
+merging tiles by rescaling, and emits  H = m + log Z - T / Z  — the
+TPU-native formulation of "EAT costs one extra token" (DESIGN.md §4.2).
+
+Grid: (B tiles, V tiles), V innermost.  Block shapes: h (bB, d) stays
+resident across the V loop (index map ignores j); W tile (d, bV) streams.
+bV defaults to 1024 lanes; d rides whole (assigned archs: 1024..5120 →
+h tile ≤ 8x5120x4B = 160KB, W tile ≤ 5120x1024x2B = 10MB... bV is chosen
+by ``ops.py`` to keep h + W tiles within a 16MB VMEM budget).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(h_ref, w_ref, o_ref, m_scr, z_scr, t_scr, *, vocab, block_v, n_v):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        z_scr[...] = jnp.zeros_like(z_scr)
+        t_scr[...] = jnp.zeros_like(t_scr)
+
+    h = h_ref[...].astype(jnp.float32)          # (bB, d)
+    w = w_ref[...].astype(jnp.float32)          # (d, bV)
+    logits = jax.lax.dot_general(
+        h, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                            # (bB, bV)
+
+    # mask padded vocab columns
+    col = j * block_v + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    valid = col < vocab
+    logits = jnp.where(valid, logits, _NEG_INF)
+
+    m_prev, z_prev, t_prev = m_scr[...], z_scr[...], t_scr[...]
+    m_tile = jnp.max(logits, axis=-1)
+    m_new = jnp.maximum(m_prev, m_tile)
+    alpha = jnp.exp(m_prev - m_new)
+    e = jnp.where(valid, jnp.exp(logits - m_new[:, None]), 0.0)
+    z_new = z_prev * alpha + jnp.sum(e, axis=-1)
+    t_new = t_prev * alpha + jnp.sum(e * jnp.where(valid, logits, 0.0), axis=-1)
+    m_scr[...] = m_new
+    z_scr[...] = z_new
+    t_scr[...] = t_new
+
+    @pl.when(j == n_v - 1)
+    def _emit():
+        m, z, t = m_scr[...], z_scr[...], t_scr[...]
+        o_ref[...] = (m + jnp.log(z) - t / z).astype(o_ref.dtype)
+
+
+def entropy_probe_pallas(
+    h: jax.Array,      # (B, d)
+    w: jax.Array,      # (d, Vp)
+    vocab: int,
+    *,
+    block_b: int = 8,
+    block_v: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:        # (B,) float32
+    B, d = h.shape
+    Vp = w.shape[1]
+    block_b = min(block_b, B)
+    block_v = min(block_v, Vp)
+
+    pad_b = (-B) % block_b
+    if pad_b:
+        h = jnp.pad(h, ((0, pad_b), (0, 0)))
+    pad_v = (-Vp) % block_v
+    if pad_v:
+        w = jnp.pad(w, ((0, 0), (0, pad_v)))
+    Bp, Vpp = h.shape[0], w.shape[1]
+    n_b, n_v = Bp // block_b, Vpp // block_v
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, vocab=vocab, block_v=block_v, n_v=n_v),
+        grid=(n_b, n_v),
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, block_v), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Bp,), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_b,), jnp.float32),
+            pltpu.VMEM((block_b,), jnp.float32),
+            pltpu.VMEM((block_b,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(h, w)
+    return out[:B]

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the EAT entropy probe (paper Eqs. 1-2, 5).
+
+Given final hidden states h (B, d) and the (possibly padded) unembedding
+matrix W (d, Vp), compute the Shannon entropy of softmax(h @ W) restricted
+to the first ``vocab`` columns (padding columns are excluded — they are an
+implementation artifact, not vocabulary).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def next_token_entropy_ref(h: jax.Array, w: jax.Array, vocab: int) -> jax.Array:
+    """h: (B, d); w: (d, Vp); returns H (B,) in nats (float32)."""
+    logits = (h.astype(jnp.float32) @ w.astype(jnp.float32))
+    Vp = logits.shape[-1]
+    if vocab < Vp:
+        mask = jnp.arange(Vp) < vocab
+        logits = jnp.where(mask, logits, -jnp.inf)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    z = jnp.exp(logits - m)
+    Z = z.sum(-1)
+    # H = m + log Z - (sum z * logits) / Z
+    T = jnp.where(jnp.isfinite(logits), z * logits, 0.0).sum(-1)
+    return (m[:, 0] + jnp.log(Z) - T / Z).astype(jnp.float32)

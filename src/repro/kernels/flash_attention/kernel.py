@@ -1,0 +1,138 @@
+"""Pallas TPU flash-attention kernel (prefill / train).
+
+TPU-native tiling: the grid iterates (batch, q-head, q-tile, kv-tile) with
+the kv-tile innermost; FlashAttention-style running (max, sum, acc)
+accumulators live in VMEM scratch so the (Sq, Skv) score matrix never
+touches HBM.  GQA is expressed through the kv BlockSpec index map
+(q heads h share kv head h // g) — no materialized head repetition.
+
+Masking uses explicit per-position integer ids (negative = invalid slot),
+which uniformly encodes causal prefill, left-padded batches, sliding
+windows, and ring-buffer caches.
+
+Block shapes default to (128, 128) on (Sq, Skv) — lane-aligned for the MXU;
+head_dim rides along whole (64..256 for the assigned archs, padded to the
+lane width by Pallas when 80/192).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, scale, causal, window, n_kv_tiles):
+    kv_i = pl.program_id(3)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * scale   # (bq, Dk)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)           # (bkv, Dk)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)           # (bkv, Dv)
+    qp = qp_ref[0]                                      # (bq,)
+    kp = kp_ref[0]                                      # (bkv,)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (bq, bkv)
+
+    valid = kp[None, :] >= 0
+    if causal:
+        valid &= kp[None, :] <= qp[:, None]
+    if window:
+        valid &= (qp[:, None] - kp[None, :]) < window
+    s = jnp.where(valid, s, _NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(valid, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (bq, Dv)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+
+    @pl.when(kv_i == n_kv_tiles - 1)
+    def _emit():
+        l = l_scr[...]
+        out = jnp.where(l[:, None] > 0, acc_scr[...] / jnp.maximum(l[:, None], 1e-30), 0.0)
+        o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,      # (B, Sq, Hq, Dk)
+    k: jax.Array,      # (B, Skv, Hkv, Dk)
+    v: jax.Array,      # (B, Skv, Hkv, Dv)
+    q_pos: jax.Array,  # (B, Sq) int32
+    kv_pos: jax.Array, # (B, Skv) int32
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Sq, Hq, Dk = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    g = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dk)
+
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+
+    # pad sequence dims to tile multiples; padded slots get position -1
+    def pad_seq(x, mult, value=0):
+        pad = (-x.shape[1]) % mult
+        if pad == 0:
+            return x
+        w = [(0, 0)] * x.ndim
+        w[1] = (0, pad)
+        return jnp.pad(x, w, constant_values=value)
+
+    q_p, qp_p = pad_seq(q, block_q), pad_seq(q_pos, block_q, -1)
+    k_p, v_p, kp_p = pad_seq(k, block_kv), pad_seq(v, block_kv), pad_seq(kv_pos, block_kv, -1)
+    Sq_p, Skv_p = q_p.shape[1], k_p.shape[1]
+    n_q, n_kv = Sq_p // block_q, Skv_p // block_kv
+
+    grid = (B, Hq, n_q, n_kv)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, causal=causal, window=window, n_kv_tiles=n_kv
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q), lambda b, h, i, j: (b, i)),           # q_pos
+            pl.BlockSpec((1, block_kv), lambda b, h, i, j: (b, j)),          # kv_pos
+            pl.BlockSpec((1, block_q, 1, Dk), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, block_kv, 1, Dk), lambda b, h, i, j: (b, j, h // g, 0)),
+            pl.BlockSpec((1, block_kv, 1, Dv), lambda b, h, i, j: (b, j, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, Dv), lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq_p, Hq, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp_p, kp_p, q_p, k_p, v_p)
+    return out[:, :Sq]

@@ -1,0 +1,155 @@
+"""Dispatching attention op.
+
+``attention(...)`` picks the implementation:
+
+* ``pallas``  — the TPU flash kernel (``kernel.py``); used on TPU backends
+  and under ``interpret=True`` in tests.
+* ``xla``     — a chunked online-softmax implementation in pure jnp
+  (`lax.scan` over query and kv tiles), memory-bounded like flash attention.
+  This is what the CPU dry-run lowers, and the fallback on non-TPU backends.
+* ``ref``     — the naive oracle (tests / tiny shapes only).
+
+All implementations share the semantics of ``ref.attention_ref``: explicit
+integer positions, position < 0 means invalid, causal + sliding-window
+masking, GQA via ``Hq % Hkv == 0``, and Dv may differ from Dk (MLA).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.flash_attention.ref import attention_ref
+
+_NEG_INF = -1e30
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0):
+    s = x.shape[axis]
+    pad = (-s) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _xla_attention(q, k, v, q_pos, kv_pos, *, causal, window, scale,
+                   q_chunk=256, kv_chunk=2048):
+    """Chunked online-softmax attention in pure XLA ops.
+
+    scan over q chunks (outer) and kv chunks (inner, online accumulation) —
+    peak score buffer is (B, Hq, q_chunk, kv_chunk) f32.
+    """
+    B, Sq, Hq, Dk = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    g = Hq // Hkv
+    orig_sq = Sq
+
+    q_chunk = min(q_chunk, max(16, Sq))
+    kv_chunk = min(kv_chunk, max(128, Skv))
+
+    q = _pad_to(q, 1, q_chunk)
+    q_pos = _pad_to(q_pos, 1, q_chunk, value=-1)
+    k = _pad_to(k, 1, kv_chunk)
+    v = _pad_to(v, 1, kv_chunk)
+    kv_pos = _pad_to(kv_pos, 1, kv_chunk, value=-1)
+    Sq_p, Skv_p = q.shape[1], k.shape[1]
+    nq, nkv = Sq_p // q_chunk, Skv_p // kv_chunk
+
+    # keep matmul INPUTS in their storage dtype (bf16) — f32 only in the
+    # accumulators (preferred_element_type) and softmax stats.  Pre-casting
+    # to f32 made GSPMD move/gather attention inputs at 2x the bytes
+    # (§Perf P3' profile).
+    qf = (q * jnp.asarray(scale, q.dtype)).reshape(B, nq, q_chunk, Hq, Dk)
+    qpf = q_pos.reshape(B, nq, q_chunk)
+    kf = k.reshape(B, nkv, kv_chunk, Hkv, Dk)
+    vf = v.reshape(B, nkv, kv_chunk, Hkv, Dv)
+    kpf = kv_pos.reshape(B, nkv, kv_chunk)
+
+    def q_step(_, q_in):
+        qc, qp = q_in  # (B, cq, Hq, Dk), (B, cq)
+
+        def kv_step(carry, kv_in):
+            m_prev, l_prev, acc = carry
+            kc, vc, kp = kv_in  # (B, ckv, Hkv, Dk/v), (B, ckv)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qc, jnp.repeat(kc, g, axis=2),
+                           preferred_element_type=jnp.float32)
+            # (B, Hq, cq, ckv) f32
+            valid = kp[:, None, None, :] >= 0
+            if causal:
+                valid &= kp[:, None, None, :] <= qp[:, None, :, None]
+            if window:
+                valid &= (qp[:, None, :, None] - kp[:, None, None, :]) < window
+            s = jnp.where(valid, s, _NEG_INF)
+            m_new = jnp.maximum(m_prev, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(valid, p, 0.0)
+            alpha = jnp.exp(m_prev - m_new)
+            l_new = l_prev * alpha + p.sum(axis=-1)
+            pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(vc.dtype),
+                            jnp.repeat(vc, g, axis=2),
+                            preferred_element_type=jnp.float32)
+            acc = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        init = (
+            jnp.full((B, Hq, q_chunk), _NEG_INF, jnp.float32),
+            jnp.zeros((B, Hq, q_chunk), jnp.float32),
+            jnp.zeros((B, Hq, q_chunk, Dv), jnp.float32),
+        )
+        (m, l, acc), _ = lax.scan(
+            kv_step,
+            init,
+            (
+                jnp.moveaxis(kf, 1, 0),
+                jnp.moveaxis(vf, 1, 0),
+                jnp.moveaxis(kpf, 1, 0),
+            ),
+        )
+        out = jnp.where(l[..., None] > 0, acc / jnp.maximum(l[..., None], 1e-30), 0.0)
+        return None, out.transpose(0, 2, 1, 3)  # (B, cq, Hq, Dv)
+
+    _, out = lax.scan(
+        q_step, None, (jnp.moveaxis(qf, 1, 0), jnp.moveaxis(qpf, 1, 0))
+    )  # (nq, B, cq, Hq, Dv)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Sq_p, Hq, Dv)[:, :orig_sq]
+    return out.astype(q.dtype)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    kv_pos: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+    impl: str = "auto",
+    interpret: bool = False,
+) -> jax.Array:
+    """Masked (causal / sliding-window) GQA attention with explicit positions.
+
+    q: (B, Sq, Hq, Dk); k: (B, Skv, Hkv, Dk); v: (B, Skv, Hkv, Dv);
+    q_pos: (B, Sq) int32; kv_pos: (B, Skv) int32 (negative = invalid slot).
+    Returns (B, Sq, Hq, Dv).
+    """
+    scale = scale if scale is not None else 1.0 / math.sqrt(q.shape[-1])
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "ref":
+        return attention_ref(q, k, v, q_pos, kv_pos, causal=causal, window=window, scale=scale)
+    if impl == "pallas":
+        from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+        return flash_attention_pallas(
+            q, k, v, q_pos, kv_pos, causal=causal, window=window, scale=scale,
+            interpret=interpret,
+        )
+    return _xla_attention(q, k, v, q_pos, kv_pos, causal=causal, window=window, scale=scale)

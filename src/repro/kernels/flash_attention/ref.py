@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for masked GQA attention with explicit positions.
+
+This is the *semantic definition* used by kernel tests and small-shape code
+paths.  It materializes the full (B, H, Sq, Skv) score matrix — fine for
+tests, never used at production sequence lengths.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def attention_ref(
+    q: jax.Array,            # (B, Sq, Hq, Dk)
+    k: jax.Array,            # (B, Skv, Hkv, Dk)
+    v: jax.Array,            # (B, Skv, Hkv, Dv)
+    q_pos: jax.Array,        # (B, Sq) int32 absolute positions (< 0 = invalid)
+    kv_pos: jax.Array,       # (B, Skv) int32 absolute positions (< 0 = invalid)
+    *,
+    causal: bool = True,
+    window: int = 0,         # >0: only attend to kv with q_pos - kv_pos < window
+    scale: float | None = None,
+) -> jax.Array:              # (B, Sq, Hq, Dv)
+    B, Sq, Hq, Dk = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / (Dk ** 0.5)
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    # expand kv heads for GQA
+    kf = jnp.repeat(kf, g, axis=2)   # (B, Skv, Hq, Dk)
+    vf = jnp.repeat(vf, g, axis=2)
+
+    scores = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+
+    valid = kv_pos[:, None, None, :] >= 0
+    if causal:
+        valid &= kv_pos[:, None, None, :] <= q_pos[:, None, :, None]
+    if window:
+        valid &= (q_pos[:, None, :, None] - kv_pos[:, None, None, :]) < window
+    scores = jnp.where(valid, scores, -jnp.inf)
+
+    # fully-masked rows (e.g. padded q positions) produce zeros
+    all_masked = ~jnp.any(valid, axis=-1, keepdims=True)
+    scores = jnp.where(all_masked, 0.0, scores)
+    probs = jnp.where(all_masked, 0.0, jax.nn.softmax(scores, axis=-1))
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+    return out.astype(q.dtype)

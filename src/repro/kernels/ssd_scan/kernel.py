@@ -1,0 +1,115 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunk scan.
+
+Grid: (B, nh, n_chunks) with the chunk dim innermost and *sequential* — the
+running state h (N, hp) lives in VMEM scratch and is carried across chunk
+iterations (the TPU grid executes in order, so scratch persistence encodes
+the recurrence).  Per chunk the kernel computes, entirely in VMEM:
+
+  intra:  Y += ((C B^T) * exp(segsum(logd))) @ U          (L x L MXU matmul)
+  inter:  Y += (C @ h_prev) * exp(cumsum(logd))
+  state:  h  = exp(sum logd) h_prev + (decay_to_end * B)^T @ U
+
+L = chunk length (128 default) and N/hp are 64..128 — all matmul dims are
+MXU-aligned.  B/C group sharing (n_groups < nh) is expressed through the
+BlockSpec index map (head h reads group h // (nh/G)), mirroring the GQA
+trick in the attention kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(u_ref, d_ref, b_ref, c_ref, y_ref, hf_ref, h_scr, *, n_chunks, L):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    u = u_ref[0, :, 0, :].astype(jnp.float32)      # (L, hp)
+    logd = d_ref[0, :, 0].astype(jnp.float32)      # (L,)
+    b = b_ref[0, :, 0, :].astype(jnp.float32)      # (L, N)
+    c = c_ref[0, :, 0, :].astype(jnp.float32)      # (L, N)
+
+    cs = jnp.cumsum(logd)                           # (L,) inclusive
+    # intra-chunk: M[t,s] = (c_t . b_s) * exp(cs_t - cs_s) for s <= t
+    seg = cs[:, None] - cs[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) >= \
+          jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    mask = jnp.where(tri, jnp.exp(seg), 0.0)
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (L, L)
+    y = jax.lax.dot_general(cb * mask, u, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (L, hp)
+
+    # inter-chunk: y_t += exp(cs_t) * c_t . h_prev
+    h_prev = h_scr[...]                              # (N, hp)
+    y += jnp.exp(cs)[:, None] * jax.lax.dot_general(
+        c, h_prev, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # state update: h = exp(cs_L) h_prev + sum_s exp(cs_L - cs_s) b_s u_s^T
+    total = cs[-1]
+    w = jnp.exp(total - cs)                          # (L,)
+    bu = jax.lax.dot_general(b * w[:, None], u, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (N, hp)
+    h_scr[...] = jnp.exp(total) * h_prev + bu
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        hf_ref[0, 0] = h_scr[...].astype(hf_ref.dtype)
+
+
+def ssd_scan_pallas(
+    u: jax.Array,       # (B, S, nh, hp)
+    logd: jax.Array,    # (B, S, nh)
+    Bm: jax.Array,      # (B, S, G, N)
+    Cm: jax.Array,      # (B, S, G, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    """Returns (y (B,S,nh,hp), h_final (B,nh,N,hp)).  h0 must be zero (the
+    models pass initial state through ``ssd_chunked`` instead when resuming —
+    the kernel targets the train/prefill-from-scratch hot path)."""
+    Bsz, S, nh, hp = u.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = nh // G
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        logd = jnp.pad(logd, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc = Sp // L
+
+    y, hf = pl.pallas_call(
+        functools.partial(_kernel, n_chunks=nc, L=L),
+        grid=(Bsz, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, L, 1, hp), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, L, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, L, 1, N), lambda b, h, c, rep=rep: (b, c, h // rep, 0)),
+            pl.BlockSpec((1, L, 1, N), lambda b, h, c, rep=rep: (b, c, h // rep, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, 1, hp), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, N, hp), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, Sp, nh, hp), u.dtype),
+            jax.ShapeDtypeStruct((Bsz, nh, N, hp), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, hp), jnp.float32)],
+        interpret=interpret,
+    )(u, logd, Bm, Cm)
+    return y[:, :S], hf

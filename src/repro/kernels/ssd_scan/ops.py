@@ -1,0 +1,26 @@
+"""Dispatching wrapper for the SSD scan.
+
+XLA fallback = the chunked associative-scan implementation in
+``models.ssm.ssd_chunked`` (log-depth over chunks); pallas = the sequential
+chunk-scan kernel.  Both match ``ref.ssd_scan_ref``.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+def ssd_scan(u, logd, Bm, Cm, *, chunk: int = 128, h0=None,
+             impl: str = "auto", interpret: bool = False):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "ref":
+        return ssd_scan_ref(u, logd, Bm, Cm, h0=h0)
+    if impl == "pallas" and h0 is None:
+        from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+
+        return ssd_scan_pallas(u, logd, Bm, Cm, chunk=chunk, interpret=interpret)
+    from repro.models.ssm import ssd_chunked
+
+    return ssd_chunked(u, logd, Bm, Cm, chunk, h0)

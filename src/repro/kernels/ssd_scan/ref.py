@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the Mamba2 SSD scan: the naive O(S) recurrence
+
+    h_t = exp(logd_t) h_{t-1} + B_t (u_t)^T          (per head)
+    y_t = C_t . h_t
+
+u: (B,S,nh,hp); logd: (B,S,nh); Bm/Cm: (B,S,G,N) with nh % G == 0.
+Returns (y (B,S,nh,hp), h_final (B,nh,N,hp)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(u, logd, Bm, Cm, h0=None):
+    Bsz, S, nh, hp = u.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = nh // G
+    h = jnp.zeros((Bsz, nh, N, hp), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    ys = []
+    for t in range(S):
+        a = jnp.exp(logd[:, t].astype(jnp.float32))              # (B,nh)
+        b = jnp.repeat(Bm[:, t], rep, axis=1).astype(jnp.float32)  # (B,nh,N)
+        c = jnp.repeat(Cm[:, t], rep, axis=1).astype(jnp.float32)
+        h = a[..., None, None] * h + jnp.einsum("bhn,bhp->bhnp", b, u[:, t].astype(jnp.float32))
+        ys.append(jnp.einsum("bhn,bhnp->bhp", c, h))
+    y = jnp.stack(ys, axis=1)
+    return y.astype(u.dtype), h

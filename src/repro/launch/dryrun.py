@@ -1,0 +1,398 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and extract the roofline terms.
+
+MUST be run as its own process (``python -m repro.launch.dryrun``): the two
+lines above run before any other import so the 512 placeholder host devices
+exist before jax initializes.
+
+Per (arch, shape, mesh):
+  * train_4k     -> full train_step (fwd+bwd+AdamW) with FSDP+TP shardings
+  * prefill_32k  -> Model.prefill
+  * decode shapes-> serve_step (decode + EAT probe + EMA + exit decision)
+compiled artifacts yield memory_analysis (fits-in-HBM proof),
+cost_analysis (FLOPs / bytes), and the collective traffic parsed from the
+post-SPMD HLO — everything EXPERIMENTS.md §Dry-run/§Roofline reads.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+  python -m repro.launch.dryrun --all [--multipod] --out artifacts/dryrun
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp                         # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P   # noqa: E402
+
+from repro.configs import ASSIGNED_ARCHS        # noqa: E402
+from repro.configs.base import INPUT_SHAPES, get_config      # noqa: E402
+from repro.core.ema import ema_init             # noqa: E402
+from repro.core.stopping import EATState        # noqa: E402
+from repro.launch import input_specs as ispec   # noqa: E402
+from repro.launch.mesh import make_ctx          # noqa: E402
+from repro.launch.serve_step import ServeStepConfig, make_serve_step  # noqa: E402
+from repro.models.model import Model            # noqa: E402
+from repro.serving.cache import cache_pspecs    # noqa: E402
+from repro.sharding.partition import param_pspecs            # noqa: E402
+from repro.training.optimizer import OptState   # noqa: E402
+from repro.training.train_loop import (         # noqa: E402
+    TrainConfig,
+    TrainState,
+    batch_pspecs,
+    make_train_step,
+    state_pspecs,
+)
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+|pred)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in the (per-partition)
+    post-SPMD HLO.  Returns {opcode: bytes, 'total': bytes, 'count': n}."""
+    out = {op: 0 for op in COLLECTIVE_OPS}
+    count = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"^[%\w.\-]+\s*=\s*(.+)$", ls)
+        if not m:
+            continue
+        rhs = m.group(1)
+        opm = re.search(r"\b(" + "|".join(COLLECTIVE_OPS) + r")(?:-start|-done)?\(", rhs)
+        if not opm:
+            continue
+        op = opm.group(1)
+        if "-done(" in rhs:       # avoid double counting start/done pairs
+            continue
+        shapes = _SHAPE_RE.findall(rhs)
+        if not shapes:
+            continue
+        # first shape(s) before the opcode are the result; shapes after the
+        # '(' are operands.  Split at the opcode position.
+        op_idx = rhs.index(opm.group(0))
+        operand_str = rhs[op_idx:]
+        operands = _SHAPE_RE.findall(operand_str)
+        use = operands if operands else shapes[:1]
+        out[op] += sum(_shape_bytes(d, s) for d, s in use)
+        count += 1
+    out["total"] = sum(out[o] for o in COLLECTIVE_OPS)
+    out["count"] = count
+    return out
+
+
+def _shardings(ctx, tree_specs):
+    return jax.tree_util.tree_map(lambda s: NamedSharding(ctx.mesh, s), tree_specs)
+
+
+def probe_depths(cfg) -> tuple[int, int]:
+    """Two small depths for the unrolled cost probes (see run_one)."""
+    if cfg.arch_type == "hybrid":
+        g = len(cfg.hybrid_pattern)
+        return g, 2 * g
+    if cfg.moe is not None:
+        fk = cfg.moe.first_k_dense
+        return fk + 2, fk + 4
+    return 2, 4
+
+
+def override_depth(cfg, n_layers: int):
+    import dataclasses as dc
+
+    kw: dict = {"n_layers": n_layers}
+    if cfg.arch_type == "encdec":
+        kw["n_encoder_layers"] = n_layers
+    return dc.replace(cfg, **kw)
+
+
+def build_lowerable(arch: str, shape_name: str, multi_pod: bool,
+                    cfg_override=None, unroll: bool = False,
+                    variant: dict | None = None):
+    """Returns (lower_fn, descr) — lower_fn() -> jax.stages.Lowered.
+
+    ``variant`` (§Perf hillclimb knobs): {"fsdp": bool,
+    "moe_combine": "psum_f32|psum_bf16|scatter", "fused_probe": bool}.
+    """
+    import dataclasses as dc
+
+    variant = variant or {}
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ctx = make_ctx(multi_pod=multi_pod)
+    ctx = dc.replace(
+        ctx,
+        fsdp=variant.get("fsdp", True),
+        moe_combine=variant.get("moe_combine", "psum_f32"),
+    )
+    model = Model(cfg, ctx, attn_impl="xla", unroll=unroll)
+    b = ctx.batch_spec_entry() if shape.global_batch % ctx.data_size == 0 else None
+    window = ispec.runtime_window(cfg, shape)
+
+    params_struct = ispec.params_specs(model)
+    pspecs = param_pspecs(params_struct, cfg, ctx)
+    psh = _shardings(ctx, pspecs)
+
+    if shape.kind == "train":
+        batch = ispec.train_batch_specs(cfg, shape)
+        state_struct = TrainState(
+            params=params_struct,
+            opt=OptState(
+                step=jax.ShapeDtypeStruct((), jnp.int32),
+                m=jax.tree_util.tree_map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), params_struct
+                ),
+                v=jax.tree_util.tree_map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), params_struct
+                ),
+            ),
+        )
+        sspec = state_pspecs(model, state_struct)
+        bspec = batch_pspecs(model, batch)
+        step = make_train_step(model, TrainConfig())
+        jitted = jax.jit(
+            step,
+            in_shardings=(_shardings(ctx, sspec), _shardings(ctx, bspec)),
+            out_shardings=(_shardings(ctx, sspec), None),
+            donate_argnums=0,
+        )
+        return (lambda: jitted.lower(state_struct, batch)), "train_step"
+
+    if shape.kind == "prefill":
+        spec = ispec.prefill_specs(cfg, shape)
+        cache_struct = spec["cache"]
+        cspec = cache_pspecs(cfg, ctx, cache_struct)
+
+        has_frames = "frames" in spec
+        has_img = "image_embeds" in spec
+
+        def prefill_fn(params, tokens, positions, pos1d, cache, *extras):
+            frames = extras[0] if has_frames else None
+            image_embeds = extras[0] if (has_img and not has_frames) else None
+            return model.prefill(
+                params, tokens, positions, pos1d, cache,
+                frames=frames, image_embeds=image_embeds, window=window,
+            )
+
+        in_sh = [
+            psh,
+            NamedSharding(ctx.mesh, P(b, None)),
+            NamedSharding(ctx.mesh, P(b, None, None) if cfg.mrope_sections else P(b, None)),
+            NamedSharding(ctx.mesh, P(b, None)),
+            _shardings(ctx, cspec),
+        ]
+        args = [params_struct, spec["tokens"], spec["positions"], spec["pos1d"],
+                cache_struct]
+        if has_frames:
+            in_sh.append(NamedSharding(ctx.mesh, P(b, None, None)))
+            args.append(spec["frames"])
+        if has_img:
+            in_sh.append(NamedSharding(ctx.mesh, P(b, None, None)))
+            args.append(spec["image_embeds"])
+        jitted = jax.jit(prefill_fn, in_shardings=tuple(in_sh), donate_argnums=4)
+        return (lambda: jitted.lower(*args)), "prefill"
+
+    # decode
+    spec = ispec.decode_specs(cfg, shape)
+    cache_struct = spec["cache"]
+    cspec = cache_pspecs(cfg, ctx, cache_struct)
+    B = shape.global_batch
+    scfg = ServeStepConfig(window=window,
+                           fused_probe=variant.get("fused_probe", False))
+    serve_step = make_serve_step(model, scfg)
+    mon_struct = EATState(
+        ema=jax.eval_shape(lambda: ema_init(B)),
+        last=jax.ShapeDtypeStruct((B,), jnp.float32),
+    )
+    mon_spec = jax.tree_util.tree_map(lambda _: P(b), mon_struct)
+    in_sh = (
+        psh,
+        _shardings(ctx, cspec),
+        NamedSharding(ctx.mesh, P(b, None)),
+        NamedSharding(ctx.mesh, P(b, None)),
+        _shardings(ctx, mon_spec),
+        NamedSharding(ctx.mesh, P()),
+    )
+    jitted = jax.jit(serve_step, in_shardings=in_sh, donate_argnums=1)
+    return (
+        lambda: jitted.lower(
+            params_struct, cache_struct, spec["token"], spec["pos1d"],
+            mon_struct, spec["rng"],
+        ),
+        "serve_step",
+    )
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str | None,
+            keep_hlo: bool = False, variant: dict | None = None,
+            tag: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "variant": variant or {}, "tag": tag,
+    }
+    reason = ispec.skip_reason(cfg, shape)
+    if reason:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+    t0 = time.time()
+    try:
+        lower_fn, step_name = build_lowerable(arch, shape_name, multi_pod,
+                                              variant=variant)
+        lowered = lower_fn()
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = parse_collective_bytes(hlo)
+
+        # ---- unrolled cost probes (XLA counts scan bodies once; extract
+        # per-layer costs from two small unrolled depths and extrapolate
+        # linearly to the full depth — EXPERIMENTS.md §Dry-run methodology)
+        L1, L2 = probe_depths(cfg)
+        probes = {}
+        for L in (L1, L2):
+            lf, _ = build_lowerable(
+                arch, shape_name, multi_pod,
+                cfg_override=override_depth(cfg, L), unroll=True,
+                variant=variant,
+            )
+            cp = lf().compile()
+            pc = cp.cost_analysis()
+            probes[L] = {
+                "flops": float(pc.get("flops", 0.0)),
+                "bytes": float(pc.get("bytes accessed", 0.0)),
+                "coll": parse_collective_bytes(cp.as_text()),
+            }
+        Lf = cfg.n_layers
+
+        def extrap(f1: float, f2: float) -> float:
+            slope = (f2 - f1) / (L2 - L1)
+            return f1 + slope * (Lf - L1)
+
+        flops_x = extrap(probes[L1]["flops"], probes[L2]["flops"])
+        bytes_x = extrap(probes[L1]["bytes"], probes[L2]["bytes"])
+        coll_x = {
+            op: extrap(probes[L1]["coll"][op], probes[L2]["coll"][op])
+            for op in COLLECTIVE_OPS
+        }
+        coll_x["total"] = sum(coll_x.values())
+
+        rec.update(
+            status="ok",
+            step=step_name,
+            window=ispec.runtime_window(cfg, shape),
+            lower_seconds=round(t_lower, 2),
+            compile_seconds=round(t_compile, 2),
+            flops_per_device=flops_x,
+            bytes_accessed_per_device=bytes_x,
+            collectives=coll_x,
+            probe_depths=[L1, L2],
+            raw_scan_costs={
+                "flops": float(cost.get("flops", -1.0)),
+                "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+                "collectives": coll,
+            },
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+            },
+            param_count=cfg.param_count(),
+            param_count_active=cfg.param_count(active_only=True),
+        )
+        if keep_hlo and out_dir:
+            hp = os.path.join(out_dir, f"{arch}_{shape_name}_{mesh_name}.hlo")
+            with open(hp, "w") as f:
+                f.write(hlo)
+    except Exception as e:  # noqa: BLE001
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-3000:]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--fsdp", choices=["on", "off"], default="on")
+    ap.add_argument("--moe-combine", choices=["psum_f32", "psum_bf16", "scatter"],
+                    default="psum_f32")
+    ap.add_argument("--fused-probe", action="store_true")
+    ap.add_argument("--tag", default="",
+                    help="suffix for output files (perf variants)")
+    args = ap.parse_args()
+
+    variant = {
+        "fsdp": args.fsdp == "on",
+        "moe_combine": args.moe_combine,
+        "fused_probe": args.fused_probe,
+    }
+
+    os.makedirs(args.out, exist_ok=True)
+    pairs = []
+    archs = ASSIGNED_ARCHS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multipod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                pairs.append((a, s, mp))
+
+    for a, s, mp in pairs:
+        rec = run_one(a, s, mp, args.out, keep_hlo=args.keep_hlo,
+                      variant=variant, tag=args.tag)
+        suffix = f"_{args.tag}" if args.tag else ""
+        name = f"{a}_{s}_{'pod2x16x16' if mp else 'pod16x16'}{suffix}.json"
+        with open(os.path.join(args.out, name), "w") as f:
+            json.dump(rec, f, indent=2)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            extra = (f"flops/dev={rec['flops_per_device']:.3e} "
+                     f"coll={rec['collectives']['total']:.3e}B "
+                     f"compile={rec['compile_seconds']}s")
+        elif status == "error":
+            extra = rec["error"]
+        else:
+            extra = rec["reason"]
+        print(f"[{status:7s}] {a} x {s} x {'2x16x16' if mp else '16x16'}  {extra}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

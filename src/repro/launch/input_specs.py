@@ -1,0 +1,105 @@
+"""ShapeDtypeStruct stand-ins for every (architecture x input-shape) pair.
+
+No device allocation ever happens here — everything is abstract shapes for
+``jax.jit(...).lower()``.  The modality frontends are stubs per the
+assignment: audio provides (B, encoder_len, d) frame embeddings, VLM
+provides (B, n_image_patches, d) projected patch embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.serving.cache import alloc_cache
+
+SDS = jax.ShapeDtypeStruct
+
+LONG_CTX_WINDOW = 8192   # SWA window substituted at long_500k (DESIGN.md §6)
+
+
+def runtime_window(cfg: ModelConfig, shape: InputShape) -> int:
+    """Attention window used at this shape (0 = full attention)."""
+    if shape.name == "long_500k" and cfg.arch_type not in ("ssm",):
+        return LONG_CTX_WINDOW
+    return cfg.sliding_window
+
+
+def cache_capacity(cfg: ModelConfig, shape: InputShape) -> int:
+    w = runtime_window(cfg, shape)
+    if w:
+        return w
+    return shape.seq_len
+
+
+def skip_reason(cfg: ModelConfig, shape: InputShape) -> str | None:
+    if cfg.name == "seamless-m4t-large-v2" and shape.name == "long_500k":
+        return ("encoder-decoder speech translation has no meaningful 512k-token "
+                "target-side decode (DESIGN.md §6)")
+    return None
+
+
+def _pos_struct(cfg: ModelConfig, B: int, S: int):
+    if cfg.mrope_sections:
+        return SDS((B, S, 3), jnp.int32)
+    return SDS((B, S), jnp.int32)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    batch: dict = {
+        "targets": SDS((B, S), jnp.int32),
+        "loss_mask": SDS((B, S), jnp.float32),
+        "positions": _pos_struct(cfg, B, S),
+        "pos1d": SDS((B, S), jnp.int32),
+    }
+    if cfg.arch_type == "vlm":
+        P = cfg.n_image_patches
+        batch["tokens"] = SDS((B, S - P), jnp.int32)
+        batch["image_embeds"] = SDS((B, P, d), jnp.bfloat16)
+    elif cfg.arch_type == "encdec":
+        batch["tokens"] = SDS((B, S), jnp.int32)
+        batch["frames"] = SDS((B, cfg.encoder_len, d), jnp.bfloat16)
+    else:
+        batch["tokens"] = SDS((B, S), jnp.int32)
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, batch: int, capacity: int) -> dict:
+    """Abstract cache pytree via eval_shape over the real allocator."""
+    return jax.eval_shape(lambda: alloc_cache(cfg, batch, capacity))
+
+
+def prefill_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    spec = {
+        "tokens": SDS((B, S), jnp.int32),
+        "positions": _pos_struct(cfg, B, S),
+        "pos1d": SDS((B, S), jnp.int32),
+        "cache": cache_specs(cfg, B, cache_capacity(cfg, shape)),
+    }
+    if cfg.arch_type == "encdec":
+        spec["frames"] = SDS((B, cfg.encoder_len, d), jnp.bfloat16)
+    if cfg.arch_type == "vlm":
+        P = cfg.n_image_patches
+        spec["tokens"] = SDS((B, S - P), jnp.int32)
+        spec["image_embeds"] = SDS((B, P, d), jnp.bfloat16)
+    return spec
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """serve_step inputs: ONE new token against a seq_len-deep cache
+    (ring-buffer of ``window`` slots when SWA is substituted)."""
+    B = shape.global_batch
+    return {
+        "token": SDS((B, 1), jnp.int32),
+        "pos1d": SDS((B, 1), jnp.int32),
+        "cache": cache_specs(cfg, B, cache_capacity(cfg, shape)),
+        "rng": SDS((2,), jnp.uint32),
+    }
+
+
+def params_specs(model) -> dict:
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))

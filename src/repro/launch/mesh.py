@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing never touches jax
+device state — the dry-run must set XLA_FLAGS before any device query.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.sharding.partition import ShardCtx
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis is
+    pure data parallelism (DCN-crossing gradient all-reduce)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_ctx(*, multi_pod: bool = False) -> ShardCtx:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    return ShardCtx(mesh=mesh, batch_axes=batch_axes, model_axis="model")
+
+
+def local_ctx() -> ShardCtx:
+    """Single-device ctx for CPU tests/examples."""
+    return ShardCtx(mesh=None)

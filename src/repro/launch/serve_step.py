@@ -1,0 +1,74 @@
+"""The jitted serving step: decode one token + the paper's EAT machinery.
+
+This is what the decode-shape dry-runs lower: a *full* EAT-monitored decode
+step — next-token sampling, the non-committing ``</think>``+prefix probe,
+the fused entropy reduction, the EMA mean/variance update, and the
+early-exit decision — as one SPMD program.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.eat import ProbeSpec, eval_eat
+from repro.core.ema import ema_update
+from repro.core.stopping import EATState, EATStopper
+from repro.models.model import Model
+from repro.serving.sampler import SamplerConfig, sample
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeStepConfig:
+    window: int = 0
+    probe: ProbeSpec = ProbeSpec((1, 6))        # </think> + "final answer:" prefix
+    stopper: EATStopper = EATStopper(alpha=0.2, delta=1e-3)
+    sampler: SamplerConfig = SamplerConfig()
+    with_probe: bool = True
+    # §Perf: fuse the probe into the decode forward (one weight pass per
+    # step instead of two; see Model.decode_and_probe)
+    fused_probe: bool = False
+
+
+def make_serve_step(model: Model, scfg: ServeStepConfig):
+    cfg = model.cfg
+
+    def _positions(pos1d):
+        if cfg.mrope_sections:
+            return jnp.broadcast_to(pos1d[..., None], pos1d.shape + (3,))
+        return pos1d
+
+    def serve_step(params, cache, token, pos1d, mon: EATState, rng):
+        """token/pos1d: (B,1).  Returns (next_token, cache, mon, stop, rng)."""
+        if scfg.with_probe and scfg.fused_probe:
+            B = token.shape[0]
+            m = len(scfg.probe)
+            probe_toks = jnp.broadcast_to(
+                jnp.asarray(scfg.probe.tokens, jnp.int32), (B, m)
+            )
+            pos_all = pos1d[:, :1] + jnp.arange(1 + m, dtype=jnp.int32)[None]
+            logits, eat, cache = model.decode_and_probe(
+                params, token, _positions(pos_all), pos_all, cache, probe_toks,
+                window=scfg.window,
+            )
+            rng, sub = jax.random.split(rng)
+            nxt = sample(sub, logits[:, -1], cfg.vocab, scfg.sampler)
+            mon = EATState(ema=ema_update(mon.ema, eat, scfg.stopper.alpha), last=eat)
+            return nxt, cache, mon, scfg.stopper.should_stop(mon), rng
+
+        logits, cache = model.decode_step(
+            params, token, _positions(pos1d), pos1d, cache, window=scfg.window
+        )
+        rng, sub = jax.random.split(rng)
+        nxt = sample(sub, logits[:, -1], cfg.vocab, scfg.sampler)
+        if scfg.with_probe:
+            next_pos = pos1d[:, -1] + 1
+            eat = eval_eat(model, params, cache, scfg.probe, next_pos)
+            mon = EATState(ema=ema_update(mon.ema, eat, scfg.stopper.alpha), last=eat)
+            stop = scfg.stopper.should_stop(mon)
+        else:
+            stop = jnp.zeros(nxt.shape, bool)
+        return nxt, cache, mon, stop, rng
+
+    return serve_step

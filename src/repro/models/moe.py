@@ -1,0 +1,210 @@
+"""Fine-grained MoE (DeepSeek-style): shared experts + routed top-k experts,
+expert-parallel over the ``model`` mesh axis via ``shard_map``.
+
+Design (DESIGN.md §4.3/§7):
+
+* The router runs in plain jit (weights replicated, tokens data-sharded).
+* Routed expert weights live 2D-sharded at rest — experts over ``model``,
+  d_model over ``data`` (FSDP) — because DeepSeek-V2's 160x60 experts are
+  the bulk of 236B parameters and must be cut 256 ways to fit HBM.
+* The expert compute runs inside ``shard_map``: activations are replicated
+  over the model axis (they are only batch-sharded), each device gathers the
+  tokens routed to its E/model_size local experts into a capacity-bounded
+  buffer (GShard position-in-expert via cumsum — no sort), runs the expert
+  FFNs as one batched matmul, scatter-adds weighted outputs, and ``psum``s
+  over the model axis.  The psum replaces the tensor-parallel MLP's usual
+  all-reduce, so expert parallelism adds no extra collective phase.
+* Capacity: dropless (C = T_local) when T_local*k is small (decode/probe —
+  inference must not drop tokens), else ceil(T_local*k*cf/E) (train/prefill,
+  standard GShard behavior; dropped tokens pass through the residual).
+
+Single-device path (ctx.mesh is None) runs the identical dispatch code with
+E_local = E — used by CPU tests.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, mlp_apply, mlp_init
+from repro.sharding.partition import ShardCtx
+
+
+def moe_init(key, cfg: ModelConfig, dtype) -> dict:
+    mo = cfg.moe
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    ks_up = jax.random.split(k2, mo.n_routed)
+    ks_gate = jax.random.split(k3, mo.n_routed)
+    ks_down = jax.random.split(k4, mo.n_routed)
+    p: dict = {
+        "router": dense_init(k1, cfg.d_model, mo.n_routed, jnp.float32),
+        "experts": {
+            "w_up": jax.vmap(lambda k: dense_init(k, cfg.d_model, mo.d_expert, dtype))(ks_up),
+            "w_gate": jax.vmap(lambda k: dense_init(k, cfg.d_model, mo.d_expert, dtype))(ks_gate),
+            "w_down": jax.vmap(lambda k: dense_init(k, mo.d_expert, cfg.d_model, dtype))(ks_down),
+        },
+    }
+    if mo.n_shared:
+        p["shared"] = mlp_init(k5, cfg, mo.d_expert * mo.n_shared, dtype)
+    return p
+
+
+def router_topk(p: dict, x: jax.Array, cfg: ModelConfig):
+    """x: (B,S,d) -> (weights (B,S,k), ids (B,S,k), aux_loss scalar)."""
+    mo = cfg.moe
+    logits = x.astype(jnp.float32) @ p["router"]          # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = lax.top_k(probs, mo.top_k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+    topw = topw * mo.routed_scale
+
+    # load-balance aux loss (Switch/DeepSeek): E * sum_e f_e * P_e
+    E = mo.n_routed
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.float32)    # (B,S,k,E)
+    f = onehot.sum(axis=(0, 1, 2)) / (onehot.sum() + 1e-9)  # dispatch fraction
+    pbar = probs.mean(axis=(0, 1))
+    aux = E * jnp.sum(f * pbar)
+    return topw, topi, aux
+
+
+def _capacity(t_local: int, k: int, n_experts: int, cf: float) -> int:
+    if t_local * k <= 4096:          # decode / small prefill: dropless
+        return t_local
+    return int(math.ceil(t_local * k * cf / n_experts))
+
+
+def _expert_compute(x, topw, topi, w_up, w_gate, w_down, *, cfg: ModelConfig,
+                    e0, n_local, cap, model_axis: str | None,
+                    combine: str = "psum_f32"):
+    """Local expert dispatch+compute.  x: (T,d); topw/topi: (T,k);
+    w_*: (n_local, ...) local expert slices.  Returns (T,d) partial output
+    (needs psum over model axis when sharded — done by caller)."""
+    T, d = x.shape
+    k = topi.shape[-1]
+    pair_e = topi.reshape(T * k)
+    pair_w = topw.reshape(T * k)
+    pair_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+
+    local = pair_e - e0
+    in_range = (local >= 0) & (local < n_local)
+    onehot = (local[:, None] == jnp.arange(n_local)[None, :]) & in_range[:, None]
+    pos = jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1       # (T*k, n_local)
+    pos_own = jnp.sum(pos * onehot, axis=-1)                      # (T*k,)
+    keep = in_range & (pos_own < cap)
+    slot = jnp.where(keep, jnp.clip(local, 0, n_local - 1) * cap + pos_own, n_local * cap)
+
+    buf_tok = jnp.full((n_local * cap + 1,), T, jnp.int32).at[slot].set(pair_t, mode="drop")
+    buf_w = jnp.zeros((n_local * cap + 1,), jnp.float32).at[slot].set(pair_w, mode="drop")
+    buf_tok, buf_w = buf_tok[:-1], buf_w[:-1]
+
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
+    xg = x_pad[buf_tok].reshape(n_local, cap, d)
+
+    h_up = jnp.einsum("ecd,edf->ecf", xg, w_up)
+    if cfg.activation in ("silu", "geglu"):
+        h_gate = jnp.einsum("ecd,edf->ecf", xg, w_gate)
+        act = jax.nn.silu if cfg.activation == "silu" else functools.partial(
+            jax.nn.gelu, approximate=True
+        )
+        h = act(h_gate) * h_up
+    else:
+        h = jax.nn.gelu(h_up, approximate=True)
+    yg = jnp.einsum("ecf,efd->ecd", h, w_down)                   # (E_l, cap, d)
+
+    yflat = yg.reshape(n_local * cap, d) * buf_w[:, None].astype(yg.dtype)
+    out = jnp.zeros((T + 1, d), yg.dtype).at[buf_tok].add(yflat)[:T]
+    if model_axis is not None:
+        if combine == "psum_bf16":
+            out = lax.psum(out.astype(jnp.bfloat16), model_axis)
+        elif combine == "scatter":
+            pass  # caller reduce-scatters over the sequence dim
+        else:
+            out = lax.psum(out, model_axis)
+    return out
+
+
+def moe_apply(
+    p: dict,
+    x: jax.Array,            # (B, S, d)
+    cfg: ModelConfig,
+    ctx: ShardCtx,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,d), aux_loss scalar)."""
+    mo = cfg.moe
+    B, S, d = x.shape
+    topw, topi, aux = router_topk(p, x, cfg)
+
+    if ctx.mesh is None or ctx.model_size == 1:
+        cap = _capacity(B * S, mo.top_k, mo.n_routed, mo.capacity_factor)
+        y = _expert_compute(
+            x.reshape(B * S, d), topw.reshape(B * S, -1), topi.reshape(B * S, -1),
+            p["experts"]["w_up"], p["experts"]["w_gate"], p["experts"]["w_down"],
+            cfg=cfg, e0=0, n_local=mo.n_routed, cap=cap, model_axis=None,
+        ).reshape(B, S, d)
+    else:
+        ms = ctx.model_size
+        n_local = mo.n_routed // ms
+        # batch=1 shapes (long_500k) cannot shard batch over data: replicate
+        batch_shardable = B % ctx.data_size == 0
+        t_local = (B // ctx.data_size) * S if batch_shardable else B * S
+        cap = _capacity(t_local, mo.top_k, mo.n_routed, mo.capacity_factor)
+        bspec = ctx.batch_spec_entry() if batch_shardable else None
+        m = ctx.model_axis
+
+        # FSDP re-gather of the d_model shards (transient, per layer)
+        w_up = ctx.wsc(p["experts"]["w_up"], P(m, None, None))
+        w_gate = ctx.wsc(p["experts"]["w_gate"], P(m, None, None))
+        w_down = ctx.wsc(p["experts"]["w_down"], P(m, None, None))
+
+        combine = ctx.moe_combine
+        if combine == "scatter" and (S % ms != 0 or B * S < ms):
+            combine = "psum_bf16"   # decode/probe steps: too few tokens
+
+        def local_fn(xl, twl, til, wu, wg, wd):
+            Bl, Sl, dl = xl.shape
+            e0 = lax.axis_index(m) * n_local
+            y = _expert_compute(
+                xl.reshape(Bl * Sl, dl), twl.reshape(Bl * Sl, -1),
+                til.reshape(Bl * Sl, -1), wu, wg, wd,
+                cfg=cfg, e0=e0, n_local=n_local, cap=cap, model_axis=m,
+                combine=combine,
+            )
+            y = y.reshape(Bl, Sl, dl)
+            if combine == "scatter":
+                # bf16 reduce-scatter over the sequence dim: each model rank
+                # keeps its S/ms slice — exactly the sequence-parallel
+                # residual layout, so the following residual add needs no
+                # re-shard.
+                y = lax.psum_scatter(
+                    y.astype(jnp.bfloat16), m, scatter_dimension=1, tiled=True
+                )
+            return y
+
+        out_spec = (P(bspec, m, None) if combine == "scatter"
+                    else P(bspec, None, None))
+        y = shard_map(
+            local_fn,
+            mesh=ctx.mesh,
+            in_specs=(
+                P(bspec, None, None),
+                P(bspec, None, None),
+                P(bspec, None, None),
+                P(m, None, None),
+                P(m, None, None),
+                P(m, None, None),
+            ),
+            out_specs=out_spec,
+            check_vma=False,
+        )(x, topw, topi, w_up, w_gate, w_down)
+        y = y.astype(x.dtype)
+
+    if mo.n_shared:
+        y = y + mlp_apply(p["shared"], x, cfg)
+    return y, aux

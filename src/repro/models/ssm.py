@@ -1,0 +1,301 @@
+"""Mamba2 (SSD — state-space duality) block. [arXiv:2405.21060]
+
+Training / prefill uses the chunked SSD algorithm:
+  * intra-chunk: quadratic "attention-like" term with decay masking,
+  * inter-chunk: associative scan over per-chunk (decay, state) pairs,
+so the sequential dependence is only over S/chunk steps (log-depth via
+``lax.associative_scan``), and the inner loops are MXU matmuls.
+
+Decode carries a recurrent state pytree:
+  ``ssm``  : (B, nh, N, hp)  per-head state  h_t = a_t h_{t-1} + dt_t B_t x_t
+  ``conv`` : (B, w-1, conv_dim)  causal-conv ring tail.
+
+Probing (EAT) uses ``ssm_step`` with ``commit=False`` semantics simply by
+discarding the returned state — the SSM analogue of not committing the KV
+cache (DESIGN.md §3).
+
+The invalid-position convention matches attention: callers pass a ``valid``
+mask; invalid steps get dt=0, x=0 => decay a=exp(0)=1 and zero input, i.e.
+the state passes through unchanged.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, rmsnorm
+
+
+class SSMDims(NamedTuple):
+    d_inner: int
+    n_heads: int
+    head_dim: int
+    n_groups: int
+    d_state: int
+    conv_dim: int
+    conv_width: int
+    chunk: int
+
+
+def ssm_dims(cfg: ModelConfig) -> SSMDims:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nh = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return SSMDims(d_inner, nh, s.head_dim, s.n_groups, s.d_state, conv_dim, s.conv_width, s.chunk)
+
+
+def ssm_init(key, cfg: ModelConfig, dtype) -> dict:
+    """Projections are stored *separately* (w_z/w_x/w_b/w_c/w_dt instead of a
+    fused in_proj) so the tensor-parallel dims (d_inner, ssd heads) shard
+    cleanly over the model axis while B/C (n_groups * d_state, tiny) stay
+    replicated — see sharding/partition.py."""
+    dm = ssm_dims(cfg)
+    gn = dm.n_groups * dm.d_state
+    ks = jax.random.split(key, 8)
+    u = jax.random.uniform(ks[0], (dm.n_heads,), minval=math.log(1e-3), maxval=math.log(1e-1))
+    dt_bias = jnp.log(jnp.expm1(jnp.exp(u)))  # inverse softplus
+    return {
+        "w_z": dense_init(ks[1], cfg.d_model, dm.d_inner, dtype),
+        "w_x": dense_init(ks[2], cfg.d_model, dm.d_inner, dtype),
+        "w_b": dense_init(ks[3], cfg.d_model, gn, dtype),
+        "w_c": dense_init(ks[4], cfg.d_model, gn, dtype),
+        "w_dt": dense_init(ks[5], cfg.d_model, dm.n_heads, dtype),
+        "conv_x_w": (jax.random.normal(ks[6], (dm.conv_width, dm.d_inner)) * 0.1).astype(dtype),
+        "conv_x_b": jnp.zeros((dm.d_inner,), dtype),
+        "conv_bc_w": (jax.random.normal(ks[7], (dm.conv_width, 2 * gn)) * 0.1).astype(dtype),
+        "conv_bc_b": jnp.zeros((2 * gn,), dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, dm.n_heads + 1, dtype=jnp.float32)),
+        "D": jnp.ones((dm.n_heads,), jnp.float32),
+        "norm_w": jnp.ones((dm.d_inner,), dtype),
+        "out_proj": dense_init(ks[0], dm.d_inner, cfg.d_model, dtype),
+    }
+
+
+def _proj(p: dict, x: jax.Array, dm: SSMDims):
+    """x -> (z, x_conv_in, bc_conv_in, dt_raw)."""
+    z = x @ p["w_z"]
+    xi = x @ p["w_x"]
+    bc = jnp.concatenate([x @ p["w_b"], x @ p["w_c"]], axis=-1)
+    dt_raw = x @ p["w_dt"]
+    return z, xi, bc, dt_raw
+
+
+def _causal_conv(xs: jax.Array, w: jax.Array, b: jax.Array, tail: jax.Array | None):
+    """Depthwise causal conv.  xs: (B,S,C); w: (W,C); tail: (B,W-1,C) or None.
+
+    Returns (silu(y), new_tail).
+    """
+    W = w.shape[0]
+    Bsz, S, C = xs.shape
+    if tail is None:
+        tail = jnp.zeros((Bsz, W - 1, C), xs.dtype)
+    full = jnp.concatenate([tail, xs], axis=1)  # (B, S+W-1, C)
+    y = jnp.zeros_like(xs)
+    for i in range(W):
+        y = y + full[:, i : i + S, :] * w[i]
+    y = y + b
+    new_tail = full[:, -(W - 1):, :]
+    return jax.nn.silu(y), new_tail
+
+
+def _segsum(logd: jax.Array) -> jax.Array:
+    """logd: (..., L) per-step log decay -> (..., L, L) matrix with
+    M[t, s] = sum_{r=s+1..t} logd_r for s <= t, -inf above diagonal."""
+    L = logd.shape[-1]
+    cs = jnp.cumsum(logd, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum_{r=s+1..t} = cs_t - cs_s
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    u: jax.Array,        # (B, S, nh, hp)  inputs  (dt * x)
+    logd: jax.Array,     # (B, S, nh)      per-step log decay (dt * A, <= 0)
+    Bm: jax.Array,       # (B, S, G, N)
+    Cm: jax.Array,       # (B, S, G, N)
+    chunk: int,
+    h0: jax.Array | None = None,   # (B, nh, N, hp) initial state
+):
+    """Chunked SSD.  Returns (y (B,S,nh,hp), h_final (B,nh,N,hp))."""
+    Bsz, S, nh, hp = u.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = nh // G
+    pad = (-S) % chunk
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        logd = jnp.pad(logd, ((0, 0), (0, pad), (0, 0)))  # log a = 0 => identity
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+    L = chunk
+
+    uc = u.reshape(Bsz, nc, L, nh, hp)
+    dc = logd.reshape(Bsz, nc, L, nh)
+    bc = Bm.reshape(Bsz, nc, L, G, N)
+    cc = Cm.reshape(Bsz, nc, L, G, N)
+
+    # ---- intra-chunk (quadratic within chunk)
+    seg = _segsum(jnp.moveaxis(dc, -1, -2))              # (B,nc,nh,L,L)
+    cb = jnp.einsum("bclgn,bcsgn->bcgls", cc, bc)        # (B,nc,G,L,L)
+    cb = jnp.repeat(cb, rep, axis=2)                     # (B,nc,nh,L,L)
+    m = cb * jnp.exp(seg)
+    y_intra = jnp.einsum("bchls,bcshp->bclhp", m, uc)
+
+    # ---- per-chunk summary state: S_c = sum_s exp(l_last - l_s) B_s u_s
+    cs = jnp.cumsum(dc, axis=2)                          # (B,nc,L,nh) inclusive
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)        # (B,nc,L,nh)
+    b_rep = jnp.repeat(bc, rep, axis=3)                  # (B,nc,L,nh,N)
+    s_chunk = jnp.einsum("bclhn,bclh,bclhp->bchnp", b_rep, decay_to_end, uc)
+
+    # ---- inter-chunk recurrence: H_k = A_k H_{k-1} + S_k
+    a_chunk = jnp.exp(cs[:, :, -1, :])                   # (B,nc,nh) total decay
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, nh, N, hp), jnp.float32)
+
+    def combine(e1, e2):
+        a1, s1 = e1
+        a2, s2 = e2
+        return a1 * a2, s2 + a2[..., None, None] * s1
+
+    aa, ss = lax.associative_scan(
+        combine, (a_chunk, s_chunk.astype(jnp.float32)), axis=1
+    )
+    # states *after* each chunk, including h0 influence
+    h_after = ss + aa[..., None, None] * h0[:, None]     # (B,nc,nh,N,hp)
+    h_before = jnp.concatenate([h0[:, None], h_after[:, :-1]], axis=1)
+
+    # ---- inter-chunk contribution: y_t += C_t . (exp(l_t) * H_before)
+    decay_from_start = jnp.exp(cs)                       # (B,nc,L,nh)
+    c_rep = jnp.repeat(cc, rep, axis=3)                  # (B,nc,L,nh,N)
+    y_inter = jnp.einsum(
+        "bclhn,bchnp->bclhp", c_rep, h_before
+    ) * decay_from_start[..., None]
+
+    y = (y_intra + y_inter).reshape(Bsz, Sp, nh, hp)[:, :S]
+    return y.astype(u.dtype), h_after[:, -1].astype(jnp.float32)
+
+
+def ssm_forward(
+    p: dict,
+    x: jax.Array,            # (B, S, d)
+    cfg: ModelConfig,
+    *,
+    valid: jax.Array | None = None,   # (B, S) bool
+    conv_tail: jax.Array | None = None,
+    h0: jax.Array | None = None,
+):
+    """Full-sequence Mamba2 block (train / prefill).
+
+    Returns (y (B,S,d), state dict {"ssm": h, "conv": tail}).
+    """
+    dm = ssm_dims(cfg)
+    Bsz, S, _ = x.shape
+    if valid is not None:
+        x = x * valid[..., None].astype(x.dtype)
+    z, xi, bc_in, dt_raw = _proj(p, x, dm)
+    tail_x = conv_tail["x"] if conv_tail is not None else None
+    tail_bc = conv_tail["bc"] if conv_tail is not None else None
+    xc, new_tail_x = _causal_conv(xi, p["conv_x_w"], p["conv_x_b"], tail_x)
+    bc, new_tail_bc = _causal_conv(bc_in, p["conv_bc_w"], p["conv_bc_b"], tail_bc)
+    gn = dm.n_groups * dm.d_state
+    b, c = jnp.split(bc, [gn], axis=-1)
+    new_tail = {"x": new_tail_x, "bc": new_tail_bc}
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    if valid is not None:
+        dt = dt * valid[..., None].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])                                          # (nh,)
+    logd = dt * A                                                     # (B,S,nh)
+
+    xh = xc.reshape(Bsz, S, dm.n_heads, dm.head_dim).astype(jnp.float32)
+    u = xh * dt[..., None]
+    bm = b.reshape(Bsz, S, dm.n_groups, dm.d_state).astype(jnp.float32)
+    cm = c.reshape(Bsz, S, dm.n_groups, dm.d_state).astype(jnp.float32)
+
+    y, h_final = ssd_chunked(u, logd, bm, cm, dm.chunk, h0)
+    y = y + xh * p["D"][:, None]
+    y = y.reshape(Bsz, S, dm.d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return out, {"ssm": h_final, "conv": new_tail}
+
+
+def ssm_step(
+    p: dict,
+    x: jax.Array,            # (B, m, d) new tokens (m small; typically 1)
+    cfg: ModelConfig,
+    state: dict,             # {"ssm": (B,nh,N,hp), "conv": (B,W-1,conv_dim)}
+    *,
+    valid: jax.Array | None = None,
+):
+    """Recurrent decode step (handles m>=1 sequentially within).
+
+    Returns (y (B,m,d), new_state). Discard new_state to "not commit" (probe).
+    """
+    dm = ssm_dims(cfg)
+    Bsz, m, _ = x.shape
+    if valid is not None:
+        x = x * valid[..., None].astype(x.dtype)
+    z, xi, bc_in, dt_raw = _proj(p, x, dm)
+
+    xc2, new_tail_x = _causal_conv(xi, p["conv_x_w"], p["conv_x_b"], state["conv"]["x"])
+    bc2, new_tail_bc = _causal_conv(bc_in, p["conv_bc_w"], p["conv_bc_b"], state["conv"]["bc"])
+    gn = dm.n_groups * dm.d_state
+    b2, c2 = jnp.split(bc2, [gn], axis=-1)
+    new_tail = {"x": new_tail_x, "bc": new_tail_bc}
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    if valid is not None:
+        dt = dt * valid[..., None].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+
+    xh = xc2.reshape(Bsz, m, dm.n_heads, dm.head_dim).astype(jnp.float32)
+    bm = b2.reshape(Bsz, m, dm.n_groups, dm.d_state).astype(jnp.float32)
+    cm = c2.reshape(Bsz, m, dm.n_groups, dm.d_state).astype(jnp.float32)
+    rep = dm.n_heads // dm.n_groups
+
+    def step(h, inp):
+        xh_t, bm_t, cm_t, dt_t = inp   # (B,nh,hp), (B,G,N), (B,G,N), (B,nh)
+        a_t = jnp.exp(dt_t * A)        # (B,nh)
+        b_rep = jnp.repeat(bm_t, rep, axis=1)   # (B,nh,N)
+        c_rep = jnp.repeat(cm_t, rep, axis=1)
+        h = a_t[..., None, None] * h + jnp.einsum(
+            "bhn,bhp,bh->bhnp", b_rep, xh_t, dt_t
+        )
+        y_t = jnp.einsum("bhn,bhnp->bhp", c_rep, h)
+        return h, y_t
+
+    h, ys = lax.scan(
+        step,
+        state["ssm"],
+        (
+            jnp.moveaxis(xh, 1, 0),
+            jnp.moveaxis(bm, 1, 0),
+            jnp.moveaxis(cm, 1, 0),
+            jnp.moveaxis(dt, 1, 0),
+        ),
+    )
+    y = jnp.moveaxis(ys, 0, 1) + xh * p["D"][:, None]   # (B,m,nh,hp)
+    y = y.reshape(Bsz, m, dm.d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return out, {"ssm": h, "conv": new_tail}
+
+
+def ssm_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    dm = ssm_dims(cfg)
+    gn = dm.n_groups * dm.d_state
+    return {
+        "ssm": jnp.zeros((batch, dm.n_heads, dm.d_state, dm.head_dim), jnp.float32),
+        "conv": {
+            "x": jnp.zeros((batch, dm.conv_width - 1, dm.d_inner), dtype),
+            "bc": jnp.zeros((batch, dm.conv_width - 1, 2 * gn), dtype),
+        },
+    }

@@ -1,0 +1,162 @@
+"""Decode-state allocation: KV caches, MLA latent caches, SSM states.
+
+Layout contract (consumed by ``models.transformer.forward_cached``):
+
+  cache = {
+    "layers": { <segment>: <stacked entries> },
+    "pos":  (B, C) int32  — absolute position held in each slot, -1 = empty,
+    "cur":  ()   int32    — committed length (ring: total tokens seen),
+    ["enc_pos"]: (B, T)   — encoder positions (encdec only),
+  }
+
+Segments mirror the parameter stack segments:
+  dense/vlm : {"seg":       {"k","v": (L,B,C,Hkv,hd)}}
+  moe       : {"dense_seg": ..., "moe_seg": ...}
+  mla (moe) : entries {"c": (L,B,C,r), "kr": (L,B,C,rope_d)}
+  encdec    : {"dec_seg":   {"k","v", "ck","cv": (L,B,T,Hkv,hd)}}
+  ssm       : {"seg":       {"ssm": (L,B,nh,N,hp), "conv": {...}}}
+  hybrid    : {"ssm_seg": (G,n_per,B,...), "attn_seg": {"k","v": (G,B,C,H,hd)}}
+
+Sliding-window configs use a ring buffer: capacity == window and slots are
+``(cur + arange(m)) % capacity`` (see ``write_slots``); masking relies on the
+explicit ``pos`` array, so ring order is irrelevant to attention.
+
+Sharding (DESIGN.md §7): batch -> (pod,data); kv-heads -> model when
+divisible, otherwise the capacity dim C -> model (GSPMD inserts the
+partial-softmax collectives); MLA latent and SSM state follow the same rule
+(C -> model for MLA; SSD heads -> model for SSM).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.ssm import ssm_dims
+from repro.models.transformer import write_slots  # noqa: F401  (re-export)
+from repro.sharding.partition import ShardCtx
+
+
+def _attn_entry(cfg: ModelConfig, lead: tuple[int, ...], B: int, C: int, dtype):
+    hd = cfg.resolved_head_dim
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {
+            "c": jnp.zeros(lead + (B, C, m.kv_lora_rank), dtype),
+            "kr": jnp.zeros(lead + (B, C, m.qk_rope_head_dim), dtype),
+        }
+    return {
+        "k": jnp.zeros(lead + (B, C, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros(lead + (B, C, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+def _ssm_entry(cfg: ModelConfig, lead: tuple[int, ...], B: int, dtype):
+    dm = ssm_dims(cfg)
+    gn = dm.n_groups * dm.d_state
+    return {
+        "ssm": jnp.zeros(lead + (B, dm.n_heads, dm.d_state, dm.head_dim), jnp.float32),
+        "conv": {
+            "x": jnp.zeros(lead + (B, dm.conv_width - 1, dm.d_inner), dtype),
+            "bc": jnp.zeros(lead + (B, dm.conv_width - 1, 2 * gn), dtype),
+        },
+    }
+
+
+def alloc_cache(cfg: ModelConfig, batch: int, capacity: int, dtype=None) -> dict:
+    """Allocate an empty cache with ``capacity`` kv slots per sequence."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    B, C = batch, capacity
+    cache: dict = {
+        "pos": jnp.full((B, C), -1, jnp.int32),
+        "cur": jnp.zeros((), jnp.int32),
+    }
+    if cfg.arch_type in ("dense", "vlm"):
+        cache["layers"] = {"seg": _attn_entry(cfg, (cfg.n_layers,), B, C, dtype)}
+    elif cfg.arch_type == "moe":
+        fk = cfg.moe.first_k_dense
+        layers = {}
+        if fk:
+            layers["dense_seg"] = _attn_entry(cfg, (fk,), B, C, dtype)
+        layers["moe_seg"] = _attn_entry(cfg, (cfg.n_layers - fk,), B, C, dtype)
+        cache["layers"] = layers
+    elif cfg.arch_type == "encdec":
+        T = cfg.encoder_len
+        entry = _attn_entry(cfg, (cfg.n_layers,), B, C, dtype)
+        hd = cfg.resolved_head_dim
+        entry["ck"] = jnp.zeros((cfg.n_layers, B, T, cfg.n_kv_heads, hd), dtype)
+        entry["cv"] = jnp.zeros((cfg.n_layers, B, T, cfg.n_kv_heads, hd), dtype)
+        cache["layers"] = {"dec_seg": entry}
+        cache["enc_pos"] = jnp.zeros((B, T), jnp.int32)
+    elif cfg.arch_type == "ssm":
+        cache["layers"] = {"seg": _ssm_entry(cfg, (cfg.n_layers,), B, dtype)}
+    elif cfg.arch_type == "hybrid":
+        pat = cfg.hybrid_pattern
+        n_per = sum(1 for k in pat if k == "ssm")
+        G = cfg.n_layers // len(pat)
+        cache["layers"] = {
+            "ssm_seg": _ssm_entry(cfg, (G, n_per), B, dtype),
+            "attn_seg": _attn_entry(cfg, (G,), B, C, dtype),
+        }
+    else:
+        raise ValueError(cfg.arch_type)
+    return cache
+
+
+
+
+def cache_pspecs(cfg: ModelConfig, ctx: ShardCtx, cache) -> dict:
+    """PartitionSpec pytree for a cache (for jit in/out shardings)."""
+    if ctx.mesh is None:
+        return jax.tree_util.tree_map(lambda _: P(), cache)
+    m = ctx.model_axis
+    ms = ctx.model_size
+    kv_on_model = cfg.n_kv_heads % ms == 0 and cfg.mla is None
+    # batch=1 shapes (long_500k) cannot shard the batch axis
+    bsz = cache["pos"].shape[0] if hasattr(cache["pos"], "shape") else 1
+    b = ctx.batch_spec_entry() if bsz % ctx.data_size == 0 else None
+
+    def spec_for(path_leaf: str, ndim: int, lead: int) -> P:
+        # lead = number of stacked layer axes before the batch axis
+        if path_leaf in ("k", "v", "ck", "cv"):
+            if kv_on_model:
+                return P(*([None] * lead), b, None, m, None)
+            return P(*([None] * lead), b, m, None, None)  # shard capacity
+        if path_leaf in ("c", "kr"):
+            return P(*([None] * lead), b, m, None)        # shard capacity
+        if path_leaf == "ssm":
+            return P(*([None] * lead), b, m, None, None)  # shard SSD heads
+        if path_leaf == "x":
+            return P(*([None] * lead), b, None, m)        # conv x channels
+        if path_leaf == "bc":
+            return P(*([None] * lead), b, None, None)
+        if path_leaf in ("pos", "enc_pos"):
+            return P(b, None)
+        return P()
+
+    from repro.utils.treeutil import tree_flatten_with_paths
+
+    flat = tree_flatten_with_paths(cache)
+    specs = []
+    for path, leaf in flat:
+        parts = path.split("/")
+        leafname = parts[-1]
+        if leafname == "cur":
+            specs.append(P())
+            continue
+        # count stacked lead axes: layers/<seg>/... entries have ndim-known
+        lead = 0
+        if parts[0] == "layers":
+            base_ndim = {"k": 4, "v": 4, "ck": 4, "cv": 4, "c": 3, "kr": 3,
+                         "ssm": 4, "x": 3, "bc": 3}[leafname]
+            lead = leaf.ndim - base_ndim
+        specs.append(spec_for(leafname, leaf.ndim, lead))
+    treedef = jax.tree_util.tree_structure(cache)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def cache_bytes(cache) -> int:
+    from repro.utils.treeutil import param_bytes
+
+    return param_bytes(cache)

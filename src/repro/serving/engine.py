@@ -1,0 +1,286 @@
+"""Batched reasoning-serving engine with EAT early exit.
+
+The engine drives a host-side loop around jitted step functions:
+
+  prefill -> [decode token -> (due?) EAT probe -> monitor update -> exit?]*
+          -> forced answer rollout (GenTillEoS with ``</think>`` appended)
+
+Per-sequence adaptivity in a batched TPU loop (DESIGN.md §4.4): exited
+sequences stay in their slots with ``active=False`` — their sampled tokens
+are replaced by PAD, their monitor state freezes, and cache writes become
+don't-cares (nothing reads a finished sequence's future slots).
+
+The same machinery provides the paper's evaluation harness:
+``reason_with_trace`` generates one long chain and records, at every
+evaluation point, EAT / confidence / forced-rollout answers — the offline
+"simulated early exiting" protocol of App. H.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.eat import ProbeSpec, eval_eat
+from repro.core.monitor import MonitorState, ReasoningMonitor
+from repro.models.model import Model
+from repro.serving.cache import alloc_cache
+from repro.serving.sampler import SamplerConfig, logprob_of, sample
+
+
+class ServeState(NamedTuple):
+    cache: dict
+    rng: jax.Array
+    active: jax.Array          # (B,) still reasoning
+    next_pos: jax.Array        # (B,) next token position (left-pad aware)
+    last_token: jax.Array      # (B,)
+    n_reasoning: jax.Array     # (B,) reasoning tokens generated
+    monitor: MonitorState
+    ended_think: jax.Array     # (B,) emitted </think> naturally
+    out_tokens: jax.Array      # (B, T_buf) generated reasoning tokens
+    out_len: jax.Array         # (B,)
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_reasoning_tokens: int = 1024
+    capacity: int = 2048                 # cache slots
+    pad_id: int = 0
+    end_think_id: int = 1
+    newline_id: int = 2
+    eos_id: int = 3
+    sampler: SamplerConfig = dataclasses.field(default_factory=SamplerConfig)
+
+
+class ReasoningEngine:
+    """White-box engine: the reasoning model is also the EAT monitor model."""
+
+    def __init__(self, model: Model, params, ecfg: EngineConfig,
+                 monitor: ReasoningMonitor | None = None):
+        from repro.core.stopping import EATStopper
+
+        self.model = model
+        self.params = params
+        self.ecfg = ecfg
+        if monitor is None:
+            monitor = ReasoningMonitor(
+                stopper=EATStopper(),
+                probe=ProbeSpec((ecfg.end_think_id,)),
+                newline_id=ecfg.newline_id,
+            )
+        self.monitor = monitor
+        cfg = model.cfg
+
+        def _positions(pos1d):
+            if cfg.mrope_sections:
+                return jnp.broadcast_to(pos1d[..., None], pos1d.shape + (3,))
+            return pos1d
+
+        self._positions = _positions
+
+        @jax.jit
+        def decode_fn(params, state: ServeState):
+            tok = state.last_token[:, None]
+            pos1d = state.next_pos[:, None]
+            logits, cache = model.decode_step(
+                params, tok, _positions(pos1d), pos1d, state.cache
+            )
+            rng, sub = jax.random.split(state.rng)
+            nxt = sample(sub, logits[:, -1], cfg.vocab, ecfg.sampler)
+            nxt = jnp.where(state.active, nxt, ecfg.pad_id)
+            ended = state.ended_think | (state.active & (nxt == ecfg.end_think_id))
+            # append at out_len via scatter
+            out_tokens = state.out_tokens.at[
+                jnp.arange(nxt.shape[0]), state.out_len
+            ].set(jnp.where(state.active, nxt, ecfg.pad_id))
+            return state._replace(
+                cache=cache,
+                rng=rng,
+                next_pos=state.next_pos + state.active.astype(jnp.int32),
+                last_token=nxt,
+                n_reasoning=state.n_reasoning + state.active.astype(jnp.int32),
+                ended_think=ended,
+                out_tokens=out_tokens,
+                out_len=state.out_len + state.active.astype(jnp.int32),
+            )
+
+        self._decode_fn = decode_fn
+
+        if monitor is not None:
+            @jax.jit
+            def probe_fn(params, cache, next_pos):
+                return eval_eat(model, params, cache, monitor.probe, next_pos)
+
+            self._probe_fn = probe_fn
+
+        @functools.partial(jax.jit, static_argnames=("n", "greedy"))
+        def rollout_fn(params, cache, next_pos, last_token, rng, *, n: int,
+                       greedy: bool = False):
+            """Forced answer rollout: append </think> then generate n tokens.
+            Cache changes are local to this call (functional).  Returns
+            (tokens (B,n), logprobs (B,n))."""
+            B = next_pos.shape[0]
+            et = jnp.full((B, 1), ecfg.end_think_id, jnp.int32)
+            pos1d = next_pos[:, None]
+            logits, cache2 = model.decode_step(params, et, _positions(pos1d), pos1d, cache)
+            scfg = dataclasses.replace(ecfg.sampler, greedy=greedy)
+
+            def step(carry, _):
+                cache_c, pos_c, logit_c, rng_c = carry
+                rng_c, sub = jax.random.split(rng_c)
+                tok = sample(sub, logit_c, cfg.vocab, scfg)
+                lp = logprob_of(logit_c, tok, cfg.vocab)
+                p1 = pos_c[:, None]
+                lg, cache_c = model.decode_step(
+                    params, tok[:, None], _positions(p1), p1, cache_c
+                )
+                return (cache_c, pos_c + 1, lg[:, -1], rng_c), (tok, lp)
+
+            (_, _, _, _), (toks, lps) = jax.lax.scan(
+                step, (cache2, next_pos + 1, logits[:, -1], rng), None, length=n
+            )
+            return jnp.moveaxis(toks, 0, 1), jnp.moveaxis(lps, 0, 1)
+
+        self._rollout_fn = rollout_fn
+
+    # ------------------------------------------------------------- prefill
+    def start(self, prompts: jax.Array, prompt_len: jax.Array, rng,
+              *, frames=None, image_embeds=None) -> ServeState:
+        """prompts: (B, S) LEFT-padded token ids; prompt_len: (B,).
+
+        Positions are 0..len-1 per sequence (pad slots get -1 = masked).
+        """
+        model, ecfg = self.model, self.ecfg
+        B, S = prompts.shape
+        pad = S - prompt_len                                # (B,)
+        pos1d = jnp.arange(S, dtype=jnp.int32)[None, :] - pad[:, None]
+        pos1d = jnp.where(pos1d >= 0, pos1d, -1)
+        n_img = 0
+        if image_embeds is not None:
+            n_img = image_embeds.shape[1]
+            img_pos = jnp.broadcast_to(
+                jnp.arange(n_img, dtype=jnp.int32)[None], (B, n_img)
+            )
+            pos1d = jnp.concatenate([img_pos, jnp.where(pos1d >= 0, pos1d + n_img, -1)], 1)
+        cache = alloc_cache(model.cfg, B, ecfg.capacity)
+        hidden, cache = jax.jit(model.prefill)(
+            self.params, prompts, self._positions(pos1d), pos1d, cache,
+            frames=frames, image_embeds=image_embeds,
+        )
+        next_pos = prompt_len + n_img
+        logits_last = self.model.logits(self.params, hidden[:, -1:])[:, 0]
+        rng, sub = jax.random.split(rng)
+        first = sample(sub, logits_last, model.cfg.vocab, ecfg.sampler)
+        buf = jnp.full((B, ecfg.max_reasoning_tokens + 8), ecfg.pad_id, jnp.int32)
+        buf = buf.at[:, 0].set(first)
+        mon = self.monitor.init(B)
+        return ServeState(
+            cache=cache,
+            rng=rng,
+            active=jnp.ones((B,), bool),
+            next_pos=next_pos.astype(jnp.int32),
+            last_token=first,
+            n_reasoning=jnp.ones((B,), jnp.int32),
+            monitor=mon,
+            ended_think=(first == ecfg.end_think_id),
+            out_tokens=buf,
+            out_len=jnp.ones((B,), jnp.int32),
+        )
+
+    # ------------------------------------------------------------- loop
+    def reason(self, state: ServeState, *, max_tokens: int | None = None,
+               use_monitor: bool = True) -> ServeState:
+        """Run the reasoning loop until all sequences exit (EAT stop, natural
+        </think>, or token budget)."""
+        ecfg = self.ecfg
+        budget = max_tokens or ecfg.max_reasoning_tokens
+        while bool(state.active.any()) and int(state.n_reasoning.max()) < budget:
+            state = self._decode_fn(self.params, state)
+            if self.monitor is not None and use_monitor:
+                due = self.monitor.due(state.monitor, state.last_token)
+                if bool((due & state.active).any()):
+                    eat = self._probe_fn(self.params, state.cache, state.next_pos)
+                    mon = self.monitor.update(state.monitor, eat, due, state.active)
+                    state = state._replace(monitor=mon)
+                else:
+                    state = state._replace(
+                        monitor=self.monitor.tick_no_eval(state.monitor, state.active)
+                    )
+                exits = state.monitor.stop_flag
+            else:
+                exits = jnp.zeros_like(state.active)
+            over = state.n_reasoning >= budget
+            state = state._replace(active=state.active & ~exits & ~state.ended_think & ~over)
+        return state
+
+    # ------------------------------------------------------------- answers
+    def force_answer(self, state: ServeState, n_tokens: int, rng=None,
+                     *, greedy: bool = False):
+        """GenTillEoS(Q, <think>, R, </think>; theta) — Eq. (10)/Alg. 1 line 11.
+        Returns (tokens (B,n), logprobs (B,n))."""
+        rng = rng if rng is not None else state.rng
+        return self._rollout_fn(
+            self.params, state.cache, state.next_pos, state.last_token, rng,
+            n=n_tokens, greedy=greedy,
+        )
+
+    def rollout_answers(self, state: ServeState, k: int, n_tokens: int, rng):
+        """K independent forced rollouts (for Pass@1 / #UA@K).  Returns
+        tokens (K, B, n)."""
+        rngs = jax.random.split(rng, k)
+        outs = [self._rollout_fn(self.params, state.cache, state.next_pos,
+                                 state.last_token, r, n=n_tokens)[0]
+                for r in rngs]
+        return jnp.stack(outs)
+
+    def eval_eat_now(self, state: ServeState) -> jax.Array:
+        return self._probe_fn(self.params, state.cache, state.next_pos)
+
+    # ------------------------------------------------------------- tracing
+    def reason_with_trace(
+        self, state: ServeState, *, max_tokens: int, rollout_k: int = 0,
+        rollout_len: int = 8, answer_extract: Optional[Callable] = None,
+        confidence_len: int = 0,
+    ) -> tuple[ServeState, list[dict]]:
+        """Generate one long chain; at every due point record EAT (and
+        optionally K rollout answers + confidence).  The offline evaluation
+        protocol of App. H — no early exit is taken."""
+        trace: list[dict] = []
+        rng = state.rng
+        while bool(state.active.any()) and int(state.n_reasoning.max()) < max_tokens:
+            state = self._decode_fn(self.params, state)
+            due = (self.monitor.due(state.monitor, state.last_token)
+                   if self.monitor is not None
+                   else state.last_token == self.ecfg.newline_id)
+            if bool((due & state.active).any()):
+                rec: dict = {
+                    "n_tokens": np.asarray(state.n_reasoning),
+                    "due": np.asarray(due & state.active),
+                    "eat": np.asarray(self.eval_eat_now(state)),
+                }
+                if rollout_k:
+                    rng, sub = jax.random.split(rng)
+                    rolls = self.rollout_answers(state, rollout_k, rollout_len, sub)
+                    rec["rollouts"] = np.asarray(rolls)
+                    if answer_extract is not None:
+                        rec["answers"] = np.stack(
+                            [answer_extract(np.asarray(rolls[i])) for i in range(rollout_k)]
+                        )
+                if confidence_len:
+                    _, lps = self.force_answer(state, confidence_len, greedy=True)
+                    rec["confidence"] = np.asarray(jnp.exp(lps.mean(-1)))
+                if self.monitor is not None:
+                    mon = self.monitor.update(state.monitor, jnp.asarray(rec["eat"]),
+                                              due, state.active)
+                    state = state._replace(monitor=mon)
+                    rec["ema_var"] = np.asarray(
+                        self.monitor.stopper.debiased_var(mon.stop_state)
+                    )
+                trace.append(rec)
+            state = state._replace(active=state.active & ~state.ended_think)
+        return state, trace

@@ -1,0 +1,106 @@
+"""Black-box EAT monitoring with a proxy model (paper §4.2, Fig. 5).
+
+The reasoning model theta is a black box: only its *verbal* token stream is
+visible (e.g. a streaming API).  A small local proxy model phi maintains its
+own KV cache over the same stream — chunks are prefilled as they arrive —
+and EAT is computed from phi's next-token distribution after a virtual
+``</think>`` (+ prefix).  Because chunk prefill + probe on the small proxy
+is much faster than the big model's generation (Fig. 5b), monitoring
+overlaps with the stream and adds no wall-clock latency; we measure that
+headroom in benchmarks/fig5_blackbox.py.
+
+NOTE: theta and phi must share a tokenizer family for the stream to be
+re-tokenized faithfully (the paper pairs DeepSeek-R1 distills, or
+re-tokenizes Claude text with Qwen's tokenizer).  In this framework both
+ends speak the synthetic task tokenizer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.eat import ProbeSpec, eval_eat
+from repro.core.monitor import MonitorState, ReasoningMonitor
+from repro.models.model import Model
+from repro.serving.cache import alloc_cache
+
+
+@dataclasses.dataclass
+class ProxyMonitor:
+    """Streaming EAT monitor around a proxy model."""
+
+    model: Model
+    params: dict
+    monitor: ReasoningMonitor
+    capacity: int = 2048
+
+    def __post_init__(self):
+        model = self.model
+
+        def _positions(pos1d):
+            if model.cfg.mrope_sections:
+                return jnp.broadcast_to(pos1d[..., None], pos1d.shape + (3,))
+            return pos1d
+
+        @jax.jit
+        def consume(params, cache, tokens, next_pos):
+            B, m = tokens.shape
+            pos1d = next_pos[:, None] + jnp.arange(m, dtype=jnp.int32)[None]
+            _, cache = model.prefill(params, tokens, _positions(pos1d), pos1d, cache)
+            return cache, next_pos + m
+
+        @jax.jit
+        def probe(params, cache, next_pos):
+            return eval_eat(model, params, cache, self.monitor.probe, next_pos)
+
+        self._consume = consume
+        self._probe = probe
+
+    def start(self, prompts: jax.Array, prompt_len: jax.Array):
+        """Feed the question prompt (left-padded).  Returns opaque state."""
+        B, S = prompts.shape
+        pad = S - prompt_len
+        pos1d = jnp.arange(S, dtype=jnp.int32)[None, :] - pad[:, None]
+        pos1d = jnp.where(pos1d >= 0, pos1d, -1)
+        cache = alloc_cache(self.model.cfg, B, self.capacity)
+        pos3 = (jnp.broadcast_to(pos1d[..., None], pos1d.shape + (3,))
+                if self.model.cfg.mrope_sections else pos1d)
+        _, cache = jax.jit(self.model.prefill)(self.params, prompts, pos3, pos1d, cache)
+        return {
+            "cache": cache,
+            "next_pos": prompt_len.astype(jnp.int32),
+            "monitor": self.monitor.init(B),
+            "probe_seconds": [],
+        }
+
+    def observe_chunk(self, state: dict, chunk: jax.Array,
+                      active: jax.Array | None = None) -> dict:
+        """Consume a chunk of streamed reasoning tokens and evaluate EAT.
+
+        chunk: (B, c) token ids (PAD-right for finished sequences).
+        Returns updated state; ``state['monitor'].stop_flag`` is the exit
+        signal to send back to the black-box generator.
+        """
+        B, c = chunk.shape
+        if active is None:
+            active = jnp.ones((B,), bool)
+        t0 = time.perf_counter()
+        cache, next_pos = self._consume(self.params, state["cache"], chunk, state["next_pos"])
+        eat = self._probe(self.params, cache, next_pos)
+        eat.block_until_ready()
+        dt = time.perf_counter() - t0
+        due = jnp.ones((B,), bool)   # chunk arrival = evaluation point
+        mon = self.monitor.update(state["monitor"], eat, due, active)
+        return {
+            "cache": cache,
+            "next_pos": next_pos,
+            "monitor": mon,
+            "probe_seconds": state["probe_seconds"] + [dt],
+            "last_eat": eat,
+        }
+
+    def should_stop(self, state: dict) -> jax.Array:
+        return state["monitor"].stop_flag

@@ -1,0 +1,53 @@
+"""Token sampling (temperature / top-p), jit-friendly, padded-vocab aware.
+
+The paper's decoding config (App. H): temperature 0.6, top-p 0.95 (the
+DeepSeek model-card recommendation); greedy for confidence rollouts.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 0.6
+    top_p: float = 0.95
+    greedy: bool = False
+
+
+def _mask_padded(logits: jax.Array, vocab: int) -> jax.Array:
+    Vp = logits.shape[-1]
+    if vocab < Vp:
+        logits = jnp.where(jnp.arange(Vp) < vocab, logits, -jnp.inf)
+    return logits
+
+
+def sample(
+    rng: jax.Array,
+    logits: jax.Array,        # (B, Vp)
+    vocab: int,
+    cfg: SamplerConfig = SamplerConfig(),
+) -> jax.Array:               # (B,) int32
+    lf = _mask_padded(logits.astype(jnp.float32), vocab)
+    if cfg.greedy:
+        return jnp.argmax(lf, axis=-1).astype(jnp.int32)
+    lf = lf / jnp.maximum(cfg.temperature, 1e-6)
+    if cfg.top_p < 1.0:
+        probs = jax.nn.softmax(lf, axis=-1)
+        srt = jnp.sort(probs, axis=-1)[:, ::-1]
+        cum = jnp.cumsum(srt, axis=-1)
+        # smallest set with cumulative mass >= top_p: keep probs >= cutoff
+        idx = jnp.sum(cum < cfg.top_p, axis=-1, keepdims=True)   # first idx reaching p
+        cutoff = jnp.take_along_axis(srt, idx, axis=-1)
+        lf = jnp.where(probs >= cutoff, lf, -jnp.inf)
+    return jax.random.categorical(rng, lf, axis=-1).astype(jnp.int32)
+
+
+def logprob_of(logits: jax.Array, token: jax.Array, vocab: int) -> jax.Array:
+    """log p(token) under softmax(logits[:, :vocab]).  logits (B,Vp), token (B,)."""
+    lf = _mask_padded(logits.astype(jnp.float32), vocab)
+    logp = jax.nn.log_softmax(lf, axis=-1)
+    return jnp.take_along_axis(logp, token[:, None], axis=-1)[:, 0]

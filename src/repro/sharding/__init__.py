@@ -1,0 +1,1 @@
+from repro.sharding.partition import ShardCtx, param_pspecs  # noqa: F401

@@ -1,0 +1,42 @@
+"""Flat-dict msgpack checkpointing (host-local; restores onto any mesh by
+re-sharding at load)."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+from repro.utils.treeutil import tree_flatten_with_paths
+
+
+def save_checkpoint(path: str, tree) -> None:
+    flat = tree_flatten_with_paths(tree)
+    payload = {}
+    for key, leaf in flat:
+        arr = np.asarray(jax.device_get(leaf))
+        payload[key] = {
+            "dtype": str(arr.dtype),
+            "shape": list(arr.shape),
+            "data": arr.tobytes(),
+        }
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+
+
+def load_checkpoint(path: str, like):
+    """Restore into the structure of ``like`` (shapes/dtypes must match)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    flat = tree_flatten_with_paths(like)
+    leaves = []
+    for key, leaf in flat:
+        rec = payload[key]
+        arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"])).reshape(rec["shape"])
+        assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,96 @@
+"""pjit train step factory.
+
+``make_train_step(model, opt_cfg)`` returns (train_step, init_state):
+train_step is jit-compiled with parameter/optimizer shardings from
+``sharding.partition`` and batch sharding over (pod, data); suitable both
+for real training (tiny models on CPU) and for ``.lower().compile()``
+dry-runs on the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.model import Model
+from repro.sharding.partition import param_pspecs
+from repro.training.optimizer import AdamWConfig, OptState, adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: AdamWConfig = AdamWConfig()
+    remat: bool = True
+    z_loss: float = 1e-4
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: OptState
+
+
+def batch_pspecs(model: Model, batch: dict):
+    """Batch arrays shard over (pod, data) on their leading axis."""
+    ctx = model.ctx
+    if ctx.mesh is None:
+        return jax.tree_util.tree_map(lambda _: P(), batch)
+    b = ctx.batch_spec_entry()
+    return jax.tree_util.tree_map(lambda x: P(b, *([None] * (x.ndim - 1))), batch)
+
+
+def state_pspecs(model: Model, state: TrainState):
+    specs = param_pspecs(state.params, model.cfg, model.ctx)
+    return TrainState(
+        params=specs,
+        opt=OptState(step=P(), m=specs, v=specs),
+    )
+
+
+def make_train_step(model: Model, tcfg: TrainConfig = TrainConfig()):
+    """Returns ``train_step(state, batch) -> (state, metrics)`` (pure fn,
+    un-jitted — callers jit with the shardings they want)."""
+
+    def loss_fn(params, batch):
+        loss, metrics = model.train_loss(
+            params, batch, remat=tcfg.remat, z_loss=tcfg.z_loss
+        )
+        return loss, metrics
+
+    def train_step(state: TrainState, batch: dict):
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, batch
+        )
+        params, opt, opt_metrics = adamw_update(tcfg.opt, grads, state.opt, state.params)
+        metrics.update(opt_metrics)
+        return TrainState(params=params, opt=opt), metrics
+
+    return train_step
+
+
+def jit_train_step(model: Model, tcfg: TrainConfig, state: TrainState, batch: dict):
+    """Jit with explicit in/out shardings on the production mesh (or plain
+    jit when ctx.mesh is None)."""
+    step = make_train_step(model, tcfg)
+    ctx = model.ctx
+    if ctx.mesh is None:
+        return jax.jit(step, donate_argnums=0)
+    sspec = state_pspecs(model, state)
+    bspec = batch_pspecs(model, batch)
+    to_sharding = lambda tree: jax.tree_util.tree_map(
+        lambda s: NamedSharding(ctx.mesh, s), tree
+    )
+    return jax.jit(
+        step,
+        in_shardings=(to_sharding(sspec), to_sharding(bspec)),
+        out_shardings=(to_sharding(sspec), None),
+        donate_argnums=0,
+    )
+
+
+def init_train_state(model: Model, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=adamw_init(params))

@@ -1,0 +1,1 @@
+from repro.utils.treeutil import param_bytes, param_count, tree_flatten_with_paths  # noqa: F401

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# allow `pytest tests/` without PYTHONPATH=src (keeps 1 CPU device — the
+# 512-device flag is ONLY set inside repro.launch.dryrun, run as its own
+# process)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

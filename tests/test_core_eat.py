@@ -1,0 +1,178 @@
+"""Unit tests for the EAT core: EMA (Eqs. 7-8 + de-bias), stoppers
+(Algs. 1-3), monitor scheduling, and the entropy helpers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.eat import entropy_of_logits, make_probe
+from repro.core.ema import ema_debiased_var, ema_init, ema_update
+from repro.core.monitor import ReasoningMonitor
+from repro.core.stopping import (
+    ConfidenceStopper,
+    EATStopper,
+    TokenBudgetStopper,
+    UniqueAnswerStopper,
+    confidence_from_logprobs,
+)
+
+
+def ema_numpy(xs, alpha):
+    m = v = 0.0
+    for x in xs:
+        m = (1 - alpha) * m + alpha * x
+        v = (1 - alpha) * v + alpha * (x - m) ** 2
+    return m, v
+
+
+def test_ema_matches_paper_recursion():
+    xs = np.random.default_rng(0).normal(2.0, 0.5, size=50)
+    alpha = 0.2
+    st = ema_init(1)
+    for x in xs:
+        st = ema_update(st, jnp.array([x]), alpha)
+    m_ref, v_ref = ema_numpy(xs, alpha)
+    assert abs(float(st.mean[0]) - m_ref) < 1e-6
+    assert abs(float(st.var[0]) - v_ref) < 1e-6
+    # de-bias: after 50 steps the correction is ~1
+    v_deb = float(ema_debiased_var(st, alpha)[0])
+    assert abs(v_deb - v_ref / (1 - 0.8 ** 50)) < 1e-6
+
+
+def test_ema_debias_first_steps():
+    st = ema_init(1)
+    st = ema_update(st, jnp.array([1.0]), 0.2)
+    # V after one update of constant: m=0.2, v=0.2*(1-0.2)^2... just check
+    # de-bias divides by (1-(1-a)^1)=a
+    assert np.isclose(float(ema_debiased_var(st, 0.2)[0]), float(st.var[0]) / 0.2)
+
+
+def test_ema_freeze_inactive():
+    st = ema_init(2)
+    st = ema_update(st, jnp.array([1.0, 1.0]), 0.2)
+    st2 = ema_update(st, jnp.array([5.0, 5.0]), 0.2,
+                     active=jnp.array([True, False]))
+    assert float(st2.mean[0]) != float(st.mean[0])
+    assert float(st2.mean[1]) == float(st.mean[1])
+    assert int(st2.count[1]) == int(st.count[1])
+
+
+def test_eat_stopper_stabilization_triggers():
+    """A trace that decreases then stabilizes must trigger; before
+    stabilization the de-biased variance must exceed the threshold."""
+    stopper = EATStopper(alpha=0.2, delta=1e-3)
+    trace = [3.0, 2.5, 2.0, 1.2, 0.5] + [0.1] * 40
+    st = stopper.init(1)
+    fired_at = None
+    for i, x in enumerate(trace):
+        st = stopper.update(st, jnp.array([x]))
+        if bool(stopper.should_stop(st)[0]) and fired_at is None:
+            fired_at = i
+    assert fired_at is not None and fired_at >= 5          # not during descent
+    # noisy trace must NOT trigger
+    rng = np.random.default_rng(1)
+    st = stopper.init(1)
+    fired = False
+    for x in 2.0 + rng.normal(0, 0.5, 40):
+        st = stopper.update(st, jnp.array([float(x)]))
+        fired |= bool(stopper.should_stop(st)[0])
+    assert not fired
+
+
+def test_smaller_delta_stops_later():
+    trace = np.concatenate([np.linspace(3, 0.2, 12), 0.2 + 0.01 * np.random.default_rng(0).normal(size=60)])
+
+    def exit_step(delta):
+        stp = EATStopper(alpha=0.2, delta=delta)
+        st = stp.init(1)
+        for i, x in enumerate(trace):
+            st = stp.update(st, jnp.array([float(x)]))
+            if bool(stp.should_stop(st)[0]):
+                return i
+        return len(trace)
+
+    assert exit_step(1e-2) <= exit_step(1e-3) <= exit_step(1e-5)
+
+
+def test_token_budget_stopper():
+    stp = TokenBudgetStopper(budget=10)
+    st = stp.init(2)
+    for _ in range(4):
+        st = stp.update(st, jnp.array([3, 1]), active=jnp.array([True, True]))
+    stop = stp.should_stop(st)
+    assert bool(stop[0]) and not bool(stop[1])
+
+
+def test_unique_answer_stopper():
+    stp = UniqueAnswerStopper(k=4, max_unique=1)
+    st = stp.init(2)
+    answers = jnp.array([[3, 3, 3, 3], [1, 2, 3, 3]])
+    st = stp.update(st, answers)
+    assert bool(stp.should_stop(st)[0])
+    assert not bool(stp.should_stop(st)[1])
+    assert int(st.n_unique[1]) == 3
+
+
+def test_confidence_helper():
+    lp = jnp.log(jnp.array([[0.5, 0.5, 0.5]]))
+    c = confidence_from_logprobs(lp)
+    assert np.isclose(float(c[0]), 0.5)
+
+
+def test_monitor_newline_scheduling():
+    mon = ReasoningMonitor(stopper=EATStopper(alpha=0.2, delta=1e-4),
+                           probe=make_probe(1, (6,)), newline_id=2, min_evals=2)
+    st = mon.init(2)
+    tok = jnp.array([2, 5])          # seq0 newline, seq1 not
+    due = mon.due(st, tok)
+    assert bool(due[0]) and not bool(due[1])
+    active = jnp.ones(2, bool)
+    st = mon.update(st, jnp.array([1.0, 1.0]), due, active)
+    assert int(st.n_evals[0]) == 1 and int(st.n_evals[1]) == 0
+
+
+def test_monitor_min_evals_blocks_stop():
+    mon = ReasoningMonitor(stopper=EATStopper(alpha=0.5, delta=1e3),  # huge delta
+                           probe=make_probe(1), newline_id=2, min_evals=3)
+    st = mon.init(1)
+    active = jnp.ones(1, bool)
+    due = jnp.ones(1, bool)
+    st = mon.update(st, jnp.array([1.0]), due, active)
+    assert not bool(st.stop_flag[0])          # only 1 eval < min_evals
+    st = mon.update(st, jnp.array([1.0]), due, active)
+    st = mon.update(st, jnp.array([1.0]), due, active)
+    assert bool(st.stop_flag[0])
+
+
+def test_entropy_of_logits_bounds():
+    logits = jnp.zeros((2, 100))
+    h = entropy_of_logits(logits)
+    assert np.allclose(np.asarray(h), np.log(100), atol=1e-5)
+    peaked = jnp.zeros((1, 100)).at[0, 3].set(100.0)
+    assert float(entropy_of_logits(peaked)[0]) < 1e-3
+    # padded vocab exclusion
+    h2 = entropy_of_logits(jnp.zeros((1, 128)), vocab=100)
+    assert np.isclose(float(h2[0]), np.log(100), atol=1e-5)
+
+
+def test_giveup_stopper_fires_on_stall_not_on_stabilize():
+    from repro.core.stopping import GiveUpStopper
+
+    stp = GiveUpStopper(alpha=0.2, ceiling=0.05, patience=5, min_evals=4)
+    # noisy high trace (unsolvable regime) -> gives up
+    rng = np.random.default_rng(0)
+    st = stp.init(1)
+    fired = None
+    for i, x in enumerate(2.0 + rng.normal(0, 0.6, 40)):
+        st = stp.update(st, jnp.array([float(x)]))
+        if bool(stp.should_stop(st)[0]) and fired is None:
+            fired = i
+    assert fired is not None and fired >= stp.min_evals + stp.patience - 2
+
+    # stabilizing trace -> never gives up
+    st = stp.init(1)
+    fired = False
+    trace = list(np.linspace(3, 0.05, 8)) + [0.05] * 30
+    for x in trace:
+        st = stp.update(st, jnp.array([float(x)]))
+        fired |= bool(stp.should_stop(st)[0])
+    assert not fired

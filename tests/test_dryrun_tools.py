@@ -1,0 +1,81 @@
+"""Unit tests for dry-run tooling: HLO collective parsing, input specs,
+skip policy, probe-depth extrapolation arithmetic."""
+import numpy as np
+
+from repro.configs.base import INPUT_SHAPES, get_config
+from repro.launch import input_specs as ispec
+
+
+def test_parse_collective_bytes():
+    from repro.launch.dryrun import parse_collective_bytes
+
+    hlo = """
+  %ag = bf16[2048,512]{1,0} all-gather(bf16[128,512]{1,0} %p), dimensions={0}
+  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %x), to_apply=%sum
+  %rs = f32[64,32]{1,0} reduce-scatter(f32[1024,32]{1,0} %y), dimensions={0}
+  %cp = u32[16]{0} collective-permute(u32[16]{0} %z)
+  %aa = bf16[8,4]{1,0} all-to-all(bf16[8,4]{1,0} %w)
+  %ags = (bf16[4,4], bf16[8,4]) all-gather-start(bf16[4,4] %q)
+  %agd = bf16[8,4] all-gather-done((bf16[4,4], bf16[8,4]) %ags)
+  %not_coll = f32[10]{0} add(f32[10]{0} %a, f32[10]{0} %b)
+"""
+    out = parse_collective_bytes(hlo)
+    assert out["all-gather"] == 128 * 512 * 2 + 4 * 4 * 2   # ag + ag-start
+    assert out["all-reduce"] == 1024 * 4
+    assert out["reduce-scatter"] == 1024 * 32 * 4
+    assert out["collective-permute"] == 16 * 4
+    assert out["all-to-all"] == 8 * 4 * 2
+    assert out["count"] == 6
+
+
+def test_skip_policy():
+    cfg = get_config("seamless-m4t-large-v2")
+    assert ispec.skip_reason(cfg, INPUT_SHAPES["long_500k"]) is not None
+    assert ispec.skip_reason(cfg, INPUT_SHAPES["decode_32k"]) is None
+    for arch in ("mamba2-2.7b", "gemma-2b", "deepseek-v2-236b"):
+        assert ispec.skip_reason(get_config(arch), INPUT_SHAPES["long_500k"]) is None
+
+
+def test_window_policy():
+    long = INPUT_SHAPES["long_500k"]
+    dec = INPUT_SHAPES["decode_32k"]
+    assert ispec.runtime_window(get_config("gemma-7b"), long) == ispec.LONG_CTX_WINDOW
+    assert ispec.runtime_window(get_config("mamba2-2.7b"), long) == 0   # SSM native
+    assert ispec.runtime_window(get_config("gemma-7b"), dec) == 0
+    # cache capacity: ring buffer at long ctx, full otherwise
+    assert ispec.cache_capacity(get_config("gemma-7b"), long) == ispec.LONG_CTX_WINDOW
+    assert ispec.cache_capacity(get_config("gemma-7b"), dec) == 32768
+
+
+def test_train_batch_specs_shapes():
+    sh = INPUT_SHAPES["train_4k"]
+    for arch, extra in [("qwen3-1.7b", None), ("qwen2-vl-7b", "image_embeds"),
+                        ("seamless-m4t-large-v2", "frames")]:
+        cfg = get_config(arch)
+        spec = ispec.train_batch_specs(cfg, sh)
+        assert spec["targets"].shape == (256, 4096)
+        if extra:
+            assert extra in spec
+        if arch == "qwen2-vl-7b":
+            assert spec["tokens"].shape == (256, 4096 - cfg.n_image_patches)
+            assert spec["positions"].shape == (256, 4096, 3)
+
+
+def test_decode_specs_cache_struct():
+    sh = INPUT_SHAPES["decode_32k"]
+    cfg = get_config("deepseek-v2-236b")
+    spec = ispec.decode_specs(cfg, sh)
+    c = spec["cache"]["layers"]["moe_seg"]
+    # MLA latent cache, not expanded K/V
+    assert "c" in c and "kr" in c and "k" not in c
+    assert c["c"].shape == (59, 128, 32768, 512)
+    assert c["kr"].shape == (59, 128, 32768, 64)
+
+
+def test_probe_depth_extrapolation_linearity():
+    """The extrapolation recovers body*L + const exactly for linear data."""
+    L1, L2, Lf = 2, 4, 28
+    body, const = 7.0, 3.0
+    f1, f2 = const + body * L1, const + body * L2
+    slope = (f2 - f1) / (L2 - L1)
+    assert abs((f1 + slope * (Lf - L1)) - (const + body * Lf)) < 1e-9

@@ -1,0 +1,124 @@
+"""Serving-engine behaviour on a tiny (untrained) model: batching, early
+exit mechanics, probe non-commitment, rollout shapes, proxy monitor."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.eat import make_probe
+from repro.core.monitor import ReasoningMonitor
+from repro.core.stopping import EATStopper
+from repro.data.synthetic import ChainTask, Tokens
+from repro.models import Model
+from repro.serving.engine import EngineConfig, ReasoningEngine
+from repro.serving.proxy import ProxyMonitor
+from repro.serving.sampler import SamplerConfig
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_config("tiny")
+    model = Model(cfg, attn_impl="xla")
+    params = model.init(jax.random.PRNGKey(0))
+    ecfg = EngineConfig(
+        max_reasoning_tokens=48, capacity=128,
+        pad_id=Tokens.PAD, end_think_id=Tokens.END_THINK,
+        newline_id=Tokens.NEWLINE, eos_id=Tokens.EOS,
+        sampler=SamplerConfig(temperature=1.0, top_p=0.95),
+    )
+    monitor = ReasoningMonitor(
+        stopper=EATStopper(alpha=0.2, delta=1e-6),
+        probe=make_probe(Tokens.END_THINK, (Tokens.ANS,)),
+        newline_id=Tokens.NEWLINE,
+    )
+    return ReasoningEngine(model, params, ecfg, monitor)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    task = ChainTask()
+    return task.serve_batch(np.random.default_rng(0), 4)
+
+
+def test_start_and_reason(engine, batch):
+    st = engine.start(jnp.asarray(batch["prompts"]), jnp.asarray(batch["prompt_len"]),
+                      jax.random.PRNGKey(1))
+    assert st.active.all()
+    st = engine.reason(st, max_tokens=32)
+    assert int(st.n_reasoning.max()) <= 33
+    # all sequences terminated one way or another
+    assert (~np.asarray(st.active)).all() or int(st.n_reasoning.max()) >= 32
+
+
+def test_probe_does_not_commit(engine, batch):
+    st = engine.start(jnp.asarray(batch["prompts"]), jnp.asarray(batch["prompt_len"]),
+                      jax.random.PRNGKey(2))
+    pos_before = np.asarray(st.cache["pos"]).copy()
+    cur_before = int(st.cache["cur"])
+    eat1 = engine.eval_eat_now(st)
+    eat2 = engine.eval_eat_now(st)
+    np.testing.assert_array_equal(np.asarray(st.cache["pos"]), pos_before)
+    assert int(st.cache["cur"]) == cur_before
+    np.testing.assert_allclose(np.asarray(eat1), np.asarray(eat2), atol=1e-6)
+    assert (np.asarray(eat1) >= 0).all()
+
+
+def test_force_answer_rollouts(engine, batch):
+    st = engine.start(jnp.asarray(batch["prompts"]), jnp.asarray(batch["prompt_len"]),
+                      jax.random.PRNGKey(3))
+    toks, lps = engine.force_answer(st, 6)
+    assert toks.shape == (4, 6) and lps.shape == (4, 6)
+    assert (np.asarray(lps) <= 1e-6).all()
+    rolls = engine.rollout_answers(st, k=3, n_tokens=6, rng=jax.random.PRNGKey(4))
+    assert rolls.shape == (3, 4, 6)
+    # greedy rollouts are deterministic
+    g1, _ = engine.force_answer(st, 6, greedy=True)
+    g2, _ = engine.force_answer(st, 6, greedy=True)
+    np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2))
+
+
+def test_exited_sequences_freeze(engine, batch):
+    st = engine.start(jnp.asarray(batch["prompts"]), jnp.asarray(batch["prompt_len"]),
+                      jax.random.PRNGKey(5))
+    st = st._replace(active=jnp.array([True, False, True, False]))
+    n_before = np.asarray(st.n_reasoning).copy()
+    st2 = engine._decode_fn(engine.params, st)
+    n_after = np.asarray(st2.n_reasoning)
+    assert n_after[0] == n_before[0] + 1 and n_after[2] == n_before[2] + 1
+    assert n_after[1] == n_before[1] and n_after[3] == n_before[3]
+    assert int(st2.last_token[1]) == Tokens.PAD
+
+
+def test_trace_records(engine, batch):
+    st = engine.start(jnp.asarray(batch["prompts"]), jnp.asarray(batch["prompt_len"]),
+                      jax.random.PRNGKey(6))
+    st, trace = engine.reason_with_trace(st, max_tokens=24, rollout_k=2,
+                                         rollout_len=4,
+                                         answer_extract=ChainTask.extract_answer)
+    for rec in trace:
+        assert rec["eat"].shape == (4,)
+        assert np.isfinite(rec["eat"]).all()
+        assert rec["rollouts"].shape == (2, 4, 4)
+        assert "ema_var" in rec
+
+
+def test_proxy_monitor_stream():
+    cfg = get_config("tiny")
+    model = Model(cfg, attn_impl="xla")
+    params = model.init(jax.random.PRNGKey(7))
+    mon = ReasoningMonitor(
+        stopper=EATStopper(alpha=0.3, delta=1e-9),
+        probe=make_probe(Tokens.END_THINK, (Tokens.ANS,)),
+        newline_id=Tokens.NEWLINE,
+    )
+    proxy = ProxyMonitor(model=model, params=params, monitor=mon, capacity=64)
+    task = ChainTask()
+    b = task.serve_batch(np.random.default_rng(1), 2)
+    st = proxy.start(jnp.asarray(b["prompts"]), jnp.asarray(b["prompt_len"]))
+    chunk = jnp.full((2, 5), Tokens.STEP, jnp.int32)
+    st = proxy.observe_chunk(st, chunk)
+    assert np.isfinite(np.asarray(st["last_eat"])).all()
+    assert len(st["probe_seconds"]) == 1
+    st = proxy.observe_chunk(st, chunk)
+    assert int(st["next_pos"][0]) == int(b["prompt_len"][0]) + 10

@@ -1,0 +1,72 @@
+"""entropy_probe kernel: shape/dtype sweep vs oracle + analytic cases."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.entropy_probe.kernel import entropy_probe_pallas
+from repro.kernels.entropy_probe.ops import _xla_entropy, next_token_entropy
+from repro.kernels.entropy_probe.ref import next_token_entropy_ref
+
+SWEEP = [
+    # B, d, Vp, vocab, block_b, block_v
+    (1, 16, 64, 64, 1, 16),
+    (3, 32, 257, 200, 2, 32),
+    (8, 64, 1024, 1000, 8, 128),
+    (5, 128, 2048, 2047, 4, 256),
+]
+
+
+@pytest.mark.parametrize("case", SWEEP)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pallas_matches_ref(case, dtype):
+    B, d, Vp, vocab, bb, bv = case
+    h = jax.random.normal(jax.random.PRNGKey(0), (B, d)).astype(dtype)
+    w = (jax.random.normal(jax.random.PRNGKey(1), (d, Vp)) * 0.3).astype(dtype)
+    ref = next_token_entropy_ref(h.astype(jnp.float32), w.astype(jnp.float32), vocab)
+    out = entropy_probe_pallas(h, w, vocab, block_b=bb, block_v=bv, interpret=True)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("case", SWEEP)
+def test_xla_matches_ref(case):
+    B, d, Vp, vocab, _, bv = case
+    h = jax.random.normal(jax.random.PRNGKey(2), (B, d))
+    w = jax.random.normal(jax.random.PRNGKey(3), (d, Vp)) * 0.3
+    ref = next_token_entropy_ref(h, w, vocab)
+    out = _xla_entropy(h, w, vocab, block_v=bv)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5)
+
+
+def test_uniform_distribution_entropy():
+    """Zero logits -> H = log(valid vocab) exactly."""
+    for vocab, Vp in [(100, 128), (77, 77)]:
+        out = next_token_entropy(jnp.zeros((2, 8)), jnp.zeros((8, Vp)), vocab, impl="xla")
+        np.testing.assert_allclose(np.asarray(out), np.log(vocab), atol=1e-5)
+        pal = next_token_entropy(jnp.zeros((2, 8)), jnp.zeros((8, Vp)), vocab,
+                                 impl="pallas", interpret=True)
+        np.testing.assert_allclose(np.asarray(pal), np.log(vocab), atol=1e-5)
+
+
+def test_peaked_distribution_entropy_near_zero():
+    d, Vp = 16, 256
+    h = jnp.ones((1, d)) * 10
+    w = jnp.zeros((d, Vp)).at[:, 7].set(10.0)
+    out = next_token_entropy(h, w, Vp, impl="xla")
+    assert float(out[0]) < 1e-3
+
+
+def test_shift_invariance():
+    """Adding a constant to all logits (h -> h + c along a direction that
+    shifts every logit equally) must not change the entropy."""
+    d, Vp = 8, 64
+    h = jax.random.normal(jax.random.PRNGKey(4), (2, d))
+    w = jax.random.normal(jax.random.PRNGKey(5), (d, Vp))
+    base = next_token_entropy_ref(h, w, Vp)
+    w_shift = w + 0.0
+    logits_shift = 100.0  # emulate shift by adding constant row via bias trick
+    h2 = jnp.concatenate([h, jnp.ones((2, 1))], axis=1)
+    w2 = jnp.concatenate([w, jnp.full((1, Vp), logits_shift)], axis=0)
+    out = next_token_entropy_ref(h2, w2, Vp)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base), atol=1e-4)

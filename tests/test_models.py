@@ -1,0 +1,127 @@
+"""Model-component unit tests: RoPE/M-RoPE properties, MLA absorbed ==
+expanded, rmsnorm variants, vocab padding, loss masking."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MLAConfig, ModelConfig, get_config
+from repro.models import attention as att
+from repro.models.common import apply_mrope, apply_rope, rmsnorm
+from repro.models.model import cross_entropy_loss
+
+
+def test_rope_preserves_norm():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 5, 4, 32))
+    pos = jnp.broadcast_to(jnp.arange(5), (2, 5)).astype(jnp.int32)
+    y = apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+
+
+def test_rope_relative_position_property():
+    """<RoPE(q,m), RoPE(k,n)> depends only on m-n."""
+    d = 32
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, d))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, d))
+
+    def score(m, n):
+        qm = apply_rope(q, jnp.full((1, 1), m, jnp.int32), 10_000.0)
+        kn = apply_rope(k, jnp.full((1, 1), n, jnp.int32), 10_000.0)
+        return float(jnp.sum(qm * kn))
+
+    assert abs(score(5, 3) - score(10, 8)) < 1e-4
+    assert abs(score(7, 7) - score(0, 0)) < 1e-4
+
+
+def test_mrope_reduces_to_rope_for_text():
+    """When t==h==w positions, M-RoPE must equal ordinary RoPE."""
+    d, S = 32, 6
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, S, 2, d))
+    pos1 = jnp.broadcast_to(jnp.arange(S), (1, S)).astype(jnp.int32)
+    pos3 = jnp.broadcast_to(pos1[..., None], (1, S, 3))
+    a = apply_rope(x, pos1, 10_000.0)
+    b = apply_mrope(x, pos3, 10_000.0, (4, 6, 6))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_mla_absorbed_equals_expanded():
+    """The decode (absorbed) MLA must equal the train (expanded) MLA."""
+    cfg = get_config("deepseek-v2-236b").reduced()
+    p = att.mla_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S = 2, 7
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model)) * 0.5
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S)).astype(jnp.int32)
+    y_exp, (c, kr) = att.mla_self_attention(p, x, pos, pos, cfg, attn_impl="ref")
+    q_nope, q_rope = att.mla_q(p, x, pos, cfg)
+    y_abs = att.mla_absorbed_attend(p, q_nope, q_rope, pos, cfg, c, kr, pos,
+                                    attn_impl="ref")
+    np.testing.assert_allclose(np.asarray(y_exp), np.asarray(y_abs),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_rmsnorm_one_plus():
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 8))
+    w = jnp.zeros((8,))
+    # gemma convention: (1 + 0) * normalized == plain normalized
+    a = rmsnorm(x, w, one_plus=True)
+    b = rmsnorm(x, jnp.ones((8,)), one_plus=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_vocab_padding():
+    cfg = get_config("mamba2-2.7b")
+    assert cfg.padded_vocab % 256 == 0
+    assert cfg.padded_vocab >= cfg.vocab
+    assert cfg.padded_vocab - cfg.vocab < 256
+    assert get_config("gemma-2b").padded_vocab == 256_000  # already aligned
+
+
+def test_cross_entropy_masking_and_padding():
+    B, S, V, Vp = 2, 4, 10, 16
+    logits = jax.random.normal(jax.random.PRNGKey(0), (B, S, Vp))
+    targets = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, V)
+    mask = jnp.ones((B, S)).at[0, 0].set(0.0)
+    loss, metrics = cross_entropy_loss(logits, targets, mask, V, z_loss=0.0)
+    # loss must ignore the masked position: changing its logits is a no-op
+    logits2 = logits.at[0, 0].set(100.0)
+    loss2, _ = cross_entropy_loss(logits2, targets, mask, V, z_loss=0.0)
+    assert abs(float(loss) - float(loss2)) < 1e-5
+    # padded vocab columns are excluded from the partition function
+    logits3 = logits.at[..., V:].set(50.0)
+    loss3, _ = cross_entropy_loss(logits3, targets, mask, V, z_loss=0.0)
+    assert abs(float(loss) - float(loss3)) < 1e-5
+
+
+def test_uniform_logits_ce_is_log_vocab():
+    B, S, V = 1, 3, 12
+    logits = jnp.zeros((B, S, V))
+    targets = jnp.zeros((B, S), jnp.int32)
+    loss, _ = cross_entropy_loss(logits, targets, jnp.ones((B, S)), V, z_loss=0.0)
+    np.testing.assert_allclose(float(loss), np.log(V), atol=1e-5)
+
+
+def test_sharding_specs_pure_logic():
+    """param_pspecs is computable without real devices (AbstractMesh)."""
+    from jax.sharding import AbstractMesh, PartitionSpec as P
+    from repro.sharding.partition import ShardCtx, param_pspecs
+    from repro.models import Model
+
+    mesh = AbstractMesh((16, 16), ("data", "model"))
+    ctx = ShardCtx(mesh=mesh, batch_axes=("data",))
+    for arch in ["gemma-2b", "qwen3-1.7b", "deepseek-v2-236b", "mamba2-2.7b"]:
+        cfg = get_config(arch)
+        model = Model(cfg)
+        params = jax.eval_shape(lambda m=model: m.init(jax.random.PRNGKey(0)))
+        specs = param_pspecs(params, cfg, ctx)
+        flat_p = jax.tree_util.tree_leaves(params)
+        flat_s = jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, P))
+        assert len(flat_p) == len(flat_s)
+        for leaf, spec in zip(flat_p, flat_s):
+            # every sharded dim must divide
+            for dim, entry in zip(leaf.shape, tuple(spec) + (None,) * 8):
+                if entry == "model":
+                    assert dim % 16 == 0, (arch, leaf.shape, spec)
+                if entry == "data":
+                    assert dim % 16 == 0, (arch, leaf.shape, spec)

@@ -1,0 +1,90 @@
+"""MoE: capacity dispatch vs dense oracle, dropless inference, router
+conservation, gradients, shard_map single-device path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models import moe
+from repro.models.common import mlp_apply
+from repro.sharding.partition import ShardCtx
+
+
+def make_cfg(n_routed=8, top_k=2, n_shared=1, cf=2.0):
+    return ModelConfig(
+        name="t", arch_type="moe", d_model=32, vocab=16, d_ff=64, dtype="float32",
+        moe=MoEConfig(n_routed=n_routed, n_shared=n_shared, top_k=top_k,
+                      d_expert=16, capacity_factor=cf),
+    )
+
+
+def dense_reference(p, x, cfg):
+    topw, topi, _ = moe.router_topk(p, x, cfg)
+    ref = jnp.zeros_like(x)
+    for e in range(cfg.moe.n_routed):
+        h = jax.nn.silu(x @ p["experts"]["w_gate"][e]) * (x @ p["experts"]["w_up"][e])
+        y_e = h @ p["experts"]["w_down"][e]
+        w_e = jnp.where(topi == e, topw, 0.0).sum(-1)
+        ref = ref + y_e * w_e[..., None]
+    if cfg.moe.n_shared:
+        ref = ref + mlp_apply(p["shared"], x, cfg)
+    return ref
+
+
+@pytest.mark.parametrize("top_k,n_routed", [(1, 4), (2, 8), (6, 16)])
+def test_dispatch_matches_dense(top_k, n_routed):
+    cfg = make_cfg(n_routed=n_routed, top_k=top_k)
+    p = moe.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 9, 32))
+    y, aux = moe.moe_apply(p, x, cfg, ShardCtx(mesh=None))
+    ref = dense_reference(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-5, rtol=1e-5)
+    assert float(aux) > 0
+
+
+def test_router_topk_weights_normalized():
+    cfg = make_cfg()
+    p = moe.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 5, 32))
+    topw, topi, aux = moe.router_topk(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(topw.sum(-1)), 1.0, atol=1e-5)
+    assert int(topi.max()) < cfg.moe.n_routed
+    # aux loss of a perfectly uniform router ~ 1.0
+    assert 0.5 < float(aux) < 4.0
+
+
+def test_gradients_finite():
+    cfg = make_cfg()
+    p = moe.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, 32))
+
+    def loss(pp):
+        y, aux = moe.moe_apply(pp, x, cfg, ShardCtx(mesh=None))
+        return (y ** 2).mean() + 1e-3 * aux
+
+    g = jax.grad(loss)(p)
+    for leaf in jax.tree_util.tree_leaves(g):
+        assert np.isfinite(np.asarray(leaf)).all()
+    # router must receive gradient (weights flow through dispatch)
+    assert float(jnp.abs(g["router"]).max()) > 0
+
+
+def test_capacity_truncation_drops_not_corrupts():
+    """With capacity factor ~0, outputs fall back to shared expert only."""
+    cfg = make_cfg(cf=2.0)
+    p = moe.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    # big T so the capacity branch (not dropless) is taken: T*k > 4096
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 512, 32)) * 0.1
+    y, _ = moe.moe_apply(p, x, cfg, ShardCtx(mesh=None))
+    assert np.isfinite(np.asarray(y)).all()
+    # ample capacity == dense reference on a subset
+    ref = dense_reference(p, x[:1, :16], cfg)
+    y2, _ = moe.moe_apply(p, x[:1, :16], cfg, ShardCtx(mesh=None))
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(ref), atol=1e-5, rtol=1e-4)
+
+
+def test_capacity_rule():
+    from repro.models.moe import _capacity
+    assert _capacity(8, 6, 160, 1.25) == 8                  # dropless decode
+    assert _capacity(65536, 6, 160, 1.25) == int(np.ceil(65536 * 6 * 1.25 / 160))

@@ -1,0 +1,124 @@
+"""Serving-path parity: for every architecture family, logits from
+(prefill all) == (prefill k + decode step-by-step), and the fused
+decode+probe step == separate decode + probe, including future steps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models import Model
+from repro.serving.cache import alloc_cache
+
+FAMILIES = [
+    "tiny",                         # dense GQA + qk_norm
+    "tiny-moe",                     # MoE shared+routed
+    "tiny-ssm",                     # Mamba2 SSD
+    "zamba2-2.7b:reduced",          # hybrid
+    "deepseek-v2-236b:reduced",     # MLA + MoE
+    "seamless-m4t-large-v2:reduced",  # enc-dec
+]
+
+
+def _get(name):
+    if name.endswith(":reduced"):
+        return get_config(name[: -len(":reduced")]).reduced()
+    return get_config(name)
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_prefill_equals_stepwise_decode(name):
+    cfg = _get(name)
+    model = Model(cfg, attn_impl="xla")
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def p3(p):
+        return jnp.broadcast_to(p[..., None], p.shape + (3,)) if cfg.mrope_sections else p
+
+    kw = {}
+    if cfg.arch_type == "encdec":
+        kw["frames"] = 0.1 * jax.random.normal(jax.random.PRNGKey(3),
+                                               (B, cfg.encoder_len, cfg.d_model))
+    hidden, _ = model.prefill(params, toks, p3(pos), pos, alloc_cache(cfg, B, 24), **kw)
+    ref = model.logits(params, hidden)
+
+    cache = alloc_cache(cfg, B, 24)
+    h2, cache = model.prefill(params, toks[:, :5], p3(pos[:, :5]), pos[:, :5], cache, **kw)
+    outs = [model.logits(params, h2)[:, -1]]
+    for t in range(5, S):
+        lg, cache = model.decode_step(params, toks[:, t:t + 1], p3(pos[:, t:t + 1]),
+                                      pos[:, t:t + 1], cache)
+        outs.append(lg[:, -1])
+    stepped = jnp.stack(outs, axis=1)
+    scale = float(jnp.abs(ref[:, 4:]).max()) + 1e-9
+    diff = float(jnp.abs(stepped - ref[:, 4:]).max()) / scale
+    assert diff < 2e-2, (name, diff)
+
+
+@pytest.mark.parametrize("name", ["tiny", "tiny-ssm", "deepseek-v2-236b:reduced"])
+def test_fused_probe_equals_separate(name):
+    cfg = _get(name)
+    model = Model(cfg, attn_impl="xla")
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    cache = alloc_cache(cfg, B, 24)
+    _, cache = model.prefill(params, toks, pos, pos, cache)
+
+    tok = jnp.full((B, 1), 3, jnp.int32)
+    p1 = jnp.full((B, 1), S, jnp.int32)
+    logits_a, cache_a = model.decode_step(params, tok, p1, p1, cache)
+    probe = jnp.asarray([[1, 6]] * B, jnp.int32)
+    pp = jnp.broadcast_to(jnp.arange(2, dtype=jnp.int32)[None] + S + 1, (B, 2))
+    eat_a = model.probe_entropy(params, probe, pp, pp, cache_a)
+
+    pos_all = jnp.broadcast_to(jnp.arange(3, dtype=jnp.int32)[None] + S, (B, 3))
+    logits_b, eat_b, cache_b = model.decode_and_probe(
+        params, tok, pos_all, pos_all, cache, probe
+    )
+    np.testing.assert_allclose(np.asarray(logits_a), np.asarray(logits_b), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(eat_a), np.asarray(eat_b), atol=1e-5)
+    assert int(cache_a["cur"]) == int(cache_b["cur"])
+
+    # future decode steps agree (stale probe KV is correctly masked)
+    tok2 = jnp.full((B, 1), 7, jnp.int32)
+    p2 = p1 + 1
+    la, ca = model.decode_step(params, tok2, p2, p2, cache_a)
+    lb, cb = model.decode_step(params, tok2, p2, p2, cache_b)
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=1e-5)
+    p3_ = p2 + 1
+    la2, _ = model.decode_step(params, tok2, p3_, p3_, ca)
+    lb2, _ = model.decode_step(params, tok2, p3_, p3_, cb)
+    np.testing.assert_allclose(np.asarray(la2), np.asarray(lb2), atol=1e-5)
+
+
+def test_ring_buffer_decode_matches_full_cache():
+    """Sliding-window decode through a ring buffer == the same window mask
+    over a full cache."""
+    cfg = get_config("tiny")
+    import dataclasses as dc
+
+    cfg = dc.replace(cfg, sliding_window=6)
+    model = Model(cfg, attn_impl="xla")
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 1, 14
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    # full-capacity cache
+    cache_f = alloc_cache(cfg, B, 32)
+    _, cache_f = model.prefill(params, toks[:, :4], pos[:, :4], pos[:, :4], cache_f)
+    # ring cache: capacity == window
+    cache_r = alloc_cache(cfg, B, 6)
+    _, cache_r = model.prefill(params, toks[:, :4], pos[:, :4], pos[:, :4], cache_r)
+    for t in range(4, S):
+        lf, cache_f = model.decode_step(params, toks[:, t:t + 1], pos[:, t:t + 1],
+                                        pos[:, t:t + 1], cache_f)
+        lr, cache_r = model.decode_step(params, toks[:, t:t + 1], pos[:, t:t + 1],
+                                        pos[:, t:t + 1], cache_r)
+        np.testing.assert_allclose(np.asarray(lf), np.asarray(lr), atol=1e-4,
+                                   err_msg=f"step {t}")

@@ -1,0 +1,117 @@
+"""Mamba2 SSD: chunked == recurrent == split-prefill; masking; kernel sweep."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+from repro.models import ssm
+from repro.models.ssm import ssd_chunked
+
+
+def make_cfg(**kw):
+    base = dict(name="t", arch_type="ssm", d_model=32, vocab=16, dtype="float32",
+                ssm=SSMConfig(d_state=8, head_dim=8, expand=2, chunk=4,
+                              conv_width=3, n_groups=2))
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = make_cfg()
+    p = ssm.ssm_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 11, 32)) * 0.5
+    return cfg, p, x
+
+
+def test_chunked_equals_recurrent(setup):
+    cfg, p, x = setup
+    y_full, st_full = ssm.ssm_forward(p, x, cfg)
+    st = ssm.ssm_state_init(cfg, 2)
+    ys = []
+    for t in range(x.shape[1]):
+        y_t, st = ssm.ssm_step(p, x[:, t:t + 1], cfg, st)
+        ys.append(y_t)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_seq), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st_full["ssm"]), np.asarray(st["ssm"]), atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(st_full["conv"]["x"]), np.asarray(st["conv"]["x"]), atol=1e-6
+    )
+
+
+def test_prefill_split_continuation(setup):
+    cfg, p, x = setup
+    y_full, _ = ssm.ssm_forward(p, x, cfg)
+    y1, st1 = ssm.ssm_forward(p, x[:, :7], cfg)
+    y2, _ = ssm.ssm_forward(p, x[:, 7:], cfg, conv_tail=st1["conv"], h0=st1["ssm"])
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([y1, y2], 1)), np.asarray(y_full), atol=1e-5
+    )
+
+
+def test_left_pad_masking(setup):
+    cfg, p, x = setup
+    valid = jnp.ones((2, 11), bool).at[:, :3].set(False)
+    xpad = x.at[:, :3].set(jax.random.normal(jax.random.PRNGKey(5), (2, 3, 32)))
+    ym, stm = ssm.ssm_forward(p, xpad, cfg, valid=valid)
+    yu, stu = ssm.ssm_forward(p, x[:, 3:], cfg)
+    np.testing.assert_allclose(np.asarray(ym[:, 3:]), np.asarray(yu), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(stm["ssm"]), np.asarray(stu["ssm"]), atol=1e-5)
+
+
+SSD_SWEEP = [
+    # B, S, nh, hp, G, N, chunk
+    (1, 16, 2, 8, 1, 8, 8),
+    (2, 37, 4, 8, 2, 16, 16),
+    (2, 64, 8, 16, 1, 32, 32),
+    (1, 20, 6, 8, 3, 8, 4),
+]
+
+
+@pytest.mark.parametrize("case", SSD_SWEEP)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel_sweep(case, dtype):
+    B, S, nh, hp, G, N, chunk = case
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    u = (jax.random.normal(ks[0], (B, S, nh, hp)) * 0.3).astype(dtype)
+    logd = (-jnp.abs(jax.random.normal(ks[1], (B, S, nh))) * 0.2).astype(jnp.float32)
+    Bm = (jax.random.normal(ks[2], (B, S, G, N)) * 0.4).astype(jnp.float32)
+    Cm = (jax.random.normal(ks[3], (B, S, G, N)) * 0.4).astype(jnp.float32)
+    yr, hr = ssd_scan_ref(u.astype(jnp.float32), logd, Bm, Cm)
+    yp, hp_ = ssd_scan_pallas(u, logd, Bm, Cm, chunk=chunk, interpret=True)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(yp, np.float32), np.asarray(yr, np.float32),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(hp_), np.asarray(hr), atol=1e-2, rtol=1e-2)
+
+
+@pytest.mark.parametrize("case", SSD_SWEEP[:2])
+def test_ssd_chunked_xla_matches_ref(case):
+    B, S, nh, hp, G, N, chunk = case
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    u = jax.random.normal(ks[0], (B, S, nh, hp)) * 0.3
+    logd = -jnp.abs(jax.random.normal(ks[1], (B, S, nh))) * 0.2
+    Bm = jax.random.normal(ks[2], (B, S, G, N)) * 0.4
+    Cm = jax.random.normal(ks[3], (B, S, G, N)) * 0.4
+    yr, hr = ssd_scan_ref(u, logd, Bm, Cm)
+    yc, hc = ssd_chunked(u, logd, Bm, Cm, chunk)
+    np.testing.assert_allclose(np.asarray(yc), np.asarray(yr), atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(hc), np.asarray(hr), atol=2e-5, rtol=2e-5)
+
+
+def test_ssd_chunked_with_initial_state():
+    B, S, nh, hp, G, N = 1, 12, 2, 8, 1, 8
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    u = jax.random.normal(ks[0], (B, S, nh, hp)) * 0.3
+    logd = -jnp.abs(jax.random.normal(ks[1], (B, S, nh))) * 0.2
+    Bm = jax.random.normal(ks[2], (B, S, G, N)) * 0.4
+    Cm = jax.random.normal(ks[3], (B, S, G, N)) * 0.4
+    h0 = jax.random.normal(ks[4], (B, nh, N, hp)) * 0.2
+    yr, hr = ssd_scan_ref(u, logd, Bm, Cm, h0=h0)
+    yc, hc = ssd_chunked(u, logd, Bm, Cm, 4, h0=h0)
+    np.testing.assert_allclose(np.asarray(yc), np.asarray(yr), atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(hc), np.asarray(hr), atol=2e-5, rtol=2e-5)
