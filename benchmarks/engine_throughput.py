@@ -1,0 +1,112 @@
+"""Engine decode throughput: per-token host loop vs device-resident chunks.
+
+The per-token path dispatches one jitted step per token and syncs the host
+twice per iteration (``active.any()``, ``n_reasoning.max()``); the chunked
+path runs a ``lax.while_loop`` of up to ``chunk_len`` monitored steps per
+dispatch and syncs once per chunk.  Same tiny model, same sampler, same
+EAT monitor — the measured delta is pure dispatch + sync overhead, i.e.
+exactly what the probe-kernel work cannot recover from a host-bound loop.
+
+Run:  PYTHONPATH=src python benchmarks/engine_throughput.py
+      [--batch 8] [--budget 96] [--chunks 1 8 32] [--out artifacts/...json]
+"""
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core.eat import make_probe
+from repro.core.monitor import ReasoningMonitor
+from repro.core.stopping import EATStopper
+from repro.data.synthetic import ChainTask, Tokens
+from repro.models import Model
+from repro.serving.engine import EngineConfig, ReasoningEngine
+from repro.serving.sampler import SamplerConfig
+
+
+def build_engine(budget: int) -> ReasoningEngine:
+    cfg = get_config("tiny")
+    model = Model(cfg, attn_impl="xla")
+    params = model.init(jax.random.PRNGKey(0))
+    ecfg = EngineConfig(
+        max_reasoning_tokens=budget, capacity=max(256, budget + 64),
+        pad_id=Tokens.PAD, end_think_id=Tokens.END_THINK,
+        newline_id=Tokens.NEWLINE, eos_id=Tokens.EOS,
+        sampler=SamplerConfig(temperature=1.0, top_p=0.95),
+    )
+    # delta=0 -> the monitor runs (probe + EMA at every paragraph break)
+    # but never fires, so both paths decode the full budget: equal work.
+    monitor = ReasoningMonitor(
+        stopper=EATStopper(alpha=0.2, delta=0.0),
+        probe=make_probe(Tokens.END_THINK, (Tokens.ANS,)),
+        newline_id=Tokens.NEWLINE,
+    )
+    return ReasoningEngine(model, params, ecfg, monitor)
+
+
+def measure(run, engine, batch, budget: int, reps: int) -> tuple[float, int]:
+    """Median wall seconds + tokens generated for ``run(state)``."""
+    times, tokens = [], 0
+    for rep in range(reps + 1):        # rep 0 = compile warmup
+        st = engine.start(jnp.asarray(batch["prompts"]),
+                          jnp.asarray(batch["prompt_len"]),
+                          jax.random.PRNGKey(100 + rep))
+        jax.block_until_ready(st.cache["pos"])
+        t0 = time.perf_counter()
+        st = run(st)
+        jax.block_until_ready(st.out_tokens)
+        if rep:
+            times.append(time.perf_counter() - t0)
+            tokens = int(np.asarray(st.n_reasoning).sum())
+    return float(np.median(times)), tokens
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--budget", type=int, default=96)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--chunks", type=int, nargs="+", default=[1, 8, 32])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    engine = build_engine(args.budget)
+    batch = ChainTask().serve_batch(np.random.default_rng(0), args.batch)
+
+    t_host, tok = measure(
+        lambda st: engine._reason_per_token(st, max_tokens=args.budget),
+        engine, batch, args.budget, args.reps,
+    )
+    base_tps = tok / t_host
+    print(f"{'per-token host loop':>22s}: {t_host * 1e3:8.1f} ms  "
+          f"{base_tps:8.0f} tok/s")
+
+    rec = {"batch": args.batch, "budget": args.budget,
+           "per_token": {"seconds": t_host, "tokens_per_s": base_tps},
+           "chunked": {}}
+    for chunk in args.chunks:
+        t, tok = measure(
+            lambda st: engine.reason(st, max_tokens=args.budget,
+                                     chunk_len=chunk),
+            engine, batch, args.budget, args.reps,
+        )
+        tps = tok / t
+        rec["chunked"][chunk] = {"seconds": t, "tokens_per_s": tps,
+                                 "speedup": tps / base_tps}
+        print(f"{'chunked (len=%d)' % chunk:>22s}: {t * 1e3:8.1f} ms  "
+              f"{tps:8.0f} tok/s   {tps / base_tps:5.2f}x")
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(rec, f, indent=2)
+    return rec
+
+
+if __name__ == "__main__":
+    main()

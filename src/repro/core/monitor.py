@@ -5,7 +5,9 @@ The paper evaluates EAT every time the model emits a paragraph break
 every-S-tokens scheduling works equally well.  The monitor tracks, per
 sequence, when an evaluation is *due*, feeds the stopper, and exposes the
 combined exit decision.  It is jit-compatible: all state is arrays, all
-decisions are masks.
+decisions are masks — load-bearing now that the monitor transition runs
+inside the engine's device-resident ``decode_chunk`` (a ``lax.while_loop``
+body; see ``launch.serve_step.make_eat_step``), not a host loop.
 """
 from __future__ import annotations
 
@@ -67,4 +69,23 @@ class ReasoningMonitor:
     def tick_no_eval(self, state: MonitorState, active: jax.Array) -> MonitorState:
         return state._replace(
             since_eval=state.since_eval + active.astype(jnp.int32)
+        )
+
+    def observe(self, state: MonitorState, eat_fn, new_token: jax.Array,
+                active: jax.Array, *, lazy: bool = True) -> MonitorState:
+        """One decode step's full monitor transition, jit/scan-compatible.
+
+        ``eat_fn() -> (B,)`` produces the EAT values (a probe forward —
+        expensive).  With ``lazy=True`` it runs under ``lax.cond`` only when
+        some active sequence hits an evaluation point, so steps between due
+        points pay zero probe FLOPs; ``lazy=False`` probes unconditionally
+        (the dry-run's every-token upper bound)."""
+        due = self.due(state, new_token)
+        if not lazy:
+            return self.update(state, eat_fn(), due, active)
+        return jax.lax.cond(
+            (due & active).any(),
+            lambda s: self.update(s, eat_fn(), due, active),
+            lambda s: self.tick_no_eval(s, active),
+            state,
         )

@@ -1,6 +1,9 @@
 """Early-exit stopping rules (paper Algs. 1-3 + the confidence baseline).
 
-All stoppers share a functional interface usable inside jitted loops:
+All stoppers share a functional interface usable inside jitted loops — a
+hard requirement, not a convenience: ``EATStopper`` updates run inside the
+engine's device-resident ``decode_chunk`` (``lax.while_loop`` body), so
+state must be arrays and decisions masks, with no host round-trips:
 
     state  = stopper.init(batch)
     state  = stopper.update(state, signal, active)   # per evaluation point

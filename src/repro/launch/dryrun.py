@@ -31,13 +31,16 @@ from jax.sharding import NamedSharding, PartitionSpec as P   # noqa: E402
 
 from repro.configs import ASSIGNED_ARCHS        # noqa: E402
 from repro.configs.base import INPUT_SHAPES, get_config      # noqa: E402
-from repro.core.ema import ema_init             # noqa: E402
-from repro.core.stopping import EATState        # noqa: E402
 from repro.launch import input_specs as ispec   # noqa: E402
 from repro.launch.mesh import make_ctx          # noqa: E402
-from repro.launch.serve_step import ServeStepConfig, make_serve_step  # noqa: E402
+from repro.launch.serve_step import (           # noqa: E402
+    ServeStepConfig,
+    make_serve_step,
+    serve_monitor,
+)
 from repro.models.model import Model            # noqa: E402
 from repro.serving.cache import cache_pspecs    # noqa: E402
+from repro.utils.jax_compat import cost_analysis_dict        # noqa: E402
 from repro.sharding.partition import param_pspecs            # noqa: E402
 from repro.training.optimizer import OptState   # noqa: E402
 from repro.training.train_loop import (         # noqa: E402
@@ -221,10 +224,7 @@ def build_lowerable(arch: str, shape_name: str, multi_pod: bool,
     scfg = ServeStepConfig(window=window,
                            fused_probe=variant.get("fused_probe", False))
     serve_step = make_serve_step(model, scfg)
-    mon_struct = EATState(
-        ema=jax.eval_shape(lambda: ema_init(B)),
-        last=jax.ShapeDtypeStruct((B,), jnp.float32),
-    )
+    mon_struct = jax.eval_shape(lambda: serve_monitor(scfg).init(B))
     mon_spec = jax.tree_util.tree_map(lambda _: P(b), mon_struct)
     in_sh = (
         psh,
@@ -269,7 +269,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str | None,
         t_compile = time.time() - t0 - t_lower
 
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = cost_analysis_dict(compiled)
         hlo = compiled.as_text()
         coll = parse_collective_bytes(hlo)
 
@@ -285,7 +285,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str | None,
                 variant=variant,
             )
             cp = lf().compile()
-            pc = cp.cost_analysis()
+            pc = cost_analysis_dict(cp)
             probes[L] = {
                 "flops": float(pc.get("flops", 0.0)),
                 "bytes": float(pc.get("bytes accessed", 0.0)),

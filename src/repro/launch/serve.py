@@ -37,6 +37,11 @@ def main():
     ap.add_argument("--budget", type=int, default=96)
     ap.add_argument("--local", action="store_true")
     ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--chunk", type=int, default=32,
+                    help="decode steps per jitted dispatch")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="serve N queued requests through --batch slots "
+                         "with continuous batching (0 = single batch)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -60,9 +65,32 @@ def main():
         probe=make_probe(Tokens.END_THINK, (Tokens.ANS,)),
         newline_id=Tokens.NEWLINE,
     )
+    ecfg.chunk_len = args.chunk
     engine = ReasoningEngine(model, params, ecfg, monitor)
 
     task = ChainTask()
+    if args.requests:
+        # continuous batching: args.batch slots over a longer request queue;
+        # early-exiting sequences free their slot for the next prompt.  The
+        # shared ring pointer advances for the whole run, so capacity must
+        # cover the batch-lifetime worst case, not one budget.
+        import math
+
+        batch = task.serve_batch(np.random.default_rng(0), args.requests)
+        cohorts = math.ceil(args.requests / args.batch) + 1
+        ecfg.capacity = batch["prompts"].shape[1] + cohorts * args.budget
+        results = engine.serve(batch["prompts"], batch["prompt_len"],
+                               jax.random.PRNGKey(0), batch_size=args.batch,
+                               answer_len=4)
+        ans = np.array([ChainTask.extract_answer(r["answer_tokens"][None])[0]
+                        for r in results])
+        n = np.array([r["n_reasoning"] for r in results])
+        print(f"served {args.requests} requests through {args.batch} slots")
+        print(f"answers: {ans}  truth: {batch['answers']}")
+        print(f"correct: {(ans == batch['answers']).mean():.2f}  "
+              f"reasoning tokens: total={n.sum()} per-q={n}")
+        return
+
     batch = task.serve_batch(np.random.default_rng(0), args.batch)
     st = engine.start(jnp.asarray(batch["prompts"]), jnp.asarray(batch["prompt_len"]),
                       jax.random.PRNGKey(0))

@@ -1,9 +1,22 @@
-"""The jitted serving step: decode one token + the paper's EAT machinery.
+"""The jitted EAT-monitored decode step — ONE program, two drivers.
 
-This is what the decode-shape dry-runs lower: a *full* EAT-monitored decode
-step — next-token sampling, the non-committing ``</think>``+prefix probe,
-the fused entropy reduction, the EMA mean/variance update, and the
-early-exit decision — as one SPMD program.
+``make_eat_step`` builds the canonical single-token serving step: next-token
+sampling, the non-committing ``</think>``+prefix probe, the fused entropy
+reduction, the EMA mean/variance update, and the latched early-exit decision,
+all as masked array ops over a ``MonitorState``.  It is the shared core that
+
+  * the decode-shape dry-runs lower (via ``make_serve_step``, which fixes
+    ``active = ones`` and an every-token evaluation schedule), and
+  * ``ReasoningEngine`` scans inside its device-resident ``decode_chunk``
+    (``jax.lax.while_loop`` over this step, one host sync per chunk).
+
+so the program the roofline analyses cost out is the program the engine
+actually dispatches.
+
+Per-sequence adaptivity in a batched SPMD step: finished sequences ride
+along with ``active=False`` — their monitor state freezes (``update`` masks
+by ``due & active``) and their cache writes are don't-cares (nothing reads a
+finished sequence's future slots).
 """
 from __future__ import annotations
 
@@ -13,8 +26,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.eat import ProbeSpec, eval_eat
-from repro.core.ema import ema_update
-from repro.core.stopping import EATState, EATStopper
+from repro.core.monitor import MonitorState, ReasoningMonitor
+from repro.core.stopping import EATStopper
 from repro.models.model import Model
 from repro.serving.sampler import SamplerConfig, sample
 
@@ -31,7 +44,34 @@ class ServeStepConfig:
     fused_probe: bool = False
 
 
-def make_serve_step(model: Model, scfg: ServeStepConfig):
+def serve_monitor(scfg: ServeStepConfig) -> ReasoningMonitor:
+    """The dry-run's evaluation schedule: probe every token, no warmup —
+    the most expensive (upper-bound) configuration of the monitored step."""
+    return ReasoningMonitor(stopper=scfg.stopper, probe=scfg.probe,
+                            schedule="every_n", every_n=1, min_evals=0)
+
+
+def make_eat_step(
+    model: Model,
+    monitor: ReasoningMonitor | None,
+    sampler: SamplerConfig,
+    *,
+    window: int | None = None,
+    probe_cond: bool = True,
+    fused_probe: bool = False,
+):
+    """Build ``step(params, cache, token, pos1d, mon, active, rng)``
+    -> ``(next_token, cache, mon, stop, rng)``.
+
+    token/pos1d: (B,1); mon: MonitorState; active: (B,) bool.  ``stop`` is
+    the latched per-sequence exit mask (``mon.stop_flag``).
+
+    ``probe_cond=True`` wraps the probe+update in ``lax.cond`` on
+    ``(due & active).any()`` so chunks where no sequence hits an evaluation
+    point pay zero probe FLOPs (the engine's sparse-schedule case);
+    ``probe_cond=False`` probes unconditionally (the dry-run's every-token
+    schedule, where the cond would always take the probe branch anyway).
+    """
     cfg = model.cfg
 
     def _positions(pos1d):
@@ -39,36 +79,54 @@ def make_serve_step(model: Model, scfg: ServeStepConfig):
             return jnp.broadcast_to(pos1d[..., None], pos1d.shape + (3,))
         return pos1d
 
-    def serve_step(params, cache, token, pos1d, mon: EATState, rng):
-        """token/pos1d: (B,1).  Returns (next_token, cache, mon, stop, rng)."""
-        if scfg.with_probe and scfg.fused_probe:
+    def step(params, cache, token, pos1d, mon: MonitorState, active, rng):
+        if monitor is not None and fused_probe:
             B = token.shape[0]
-            m = len(scfg.probe)
+            m = len(monitor.probe)
             probe_toks = jnp.broadcast_to(
-                jnp.asarray(scfg.probe.tokens, jnp.int32), (B, m)
+                jnp.asarray(monitor.probe.tokens, jnp.int32), (B, m)
             )
             pos_all = pos1d[:, :1] + jnp.arange(1 + m, dtype=jnp.int32)[None]
             logits, eat, cache = model.decode_and_probe(
                 params, token, _positions(pos_all), pos_all, cache, probe_toks,
-                window=scfg.window,
+                window=window,
             )
             rng, sub = jax.random.split(rng)
-            nxt = sample(sub, logits[:, -1], cfg.vocab, scfg.sampler)
-            mon = EATState(ema=ema_update(mon.ema, eat, scfg.stopper.alpha), last=eat)
-            return nxt, cache, mon, scfg.stopper.should_stop(mon), rng
+            nxt = sample(sub, logits[:, -1], cfg.vocab, sampler)
+            mon = monitor.update(mon, eat, monitor.due(mon, nxt), active)
+            return nxt, cache, mon, mon.stop_flag, rng
 
         logits, cache = model.decode_step(
-            params, token, _positions(pos1d), pos1d, cache, window=scfg.window
+            params, token, _positions(pos1d), pos1d, cache, window=window
         )
         rng, sub = jax.random.split(rng)
-        nxt = sample(sub, logits[:, -1], cfg.vocab, scfg.sampler)
-        if scfg.with_probe:
-            next_pos = pos1d[:, -1] + 1
-            eat = eval_eat(model, params, cache, scfg.probe, next_pos)
-            mon = EATState(ema=ema_update(mon.ema, eat, scfg.stopper.alpha), last=eat)
-            stop = scfg.stopper.should_stop(mon)
-        else:
-            stop = jnp.zeros(nxt.shape, bool)
-        return nxt, cache, mon, stop, rng
+        nxt = sample(sub, logits[:, -1], cfg.vocab, sampler)
+        if monitor is None:
+            return nxt, cache, mon, jnp.zeros(nxt.shape, bool), rng
+
+        next_pos = pos1d[:, -1] + 1
+        eat_fn = lambda: eval_eat(model, params, cache, monitor.probe, next_pos)  # noqa: E731
+        mon = monitor.observe(mon, eat_fn, nxt, active, lazy=probe_cond)
+        return nxt, cache, mon, mon.stop_flag, rng
+
+    return step
+
+
+def make_serve_step(model: Model, scfg: ServeStepConfig):
+    """Dry-run adapter: the 6-arg signature the roofline shapes lower.
+
+    ``mon`` is a ``MonitorState`` (see ``serve_monitor`` for the struct);
+    all sequences are treated as active.
+    """
+    monitor = serve_monitor(scfg) if scfg.with_probe else None
+    step = make_eat_step(
+        model, monitor, scfg.sampler, window=scfg.window,
+        probe_cond=False, fused_probe=scfg.fused_probe,
+    )
+
+    def serve_step(params, cache, token, pos1d, mon: MonitorState, rng):
+        """token/pos1d: (B,1).  Returns (next_token, cache, mon, stop, rng)."""
+        active = jnp.ones(token.shape[:1], bool)
+        return step(params, cache, token, pos1d, mon, active, rng)
 
     return serve_step

@@ -253,8 +253,9 @@ def seq_sharded_decode_attention(
     """Flash-decode over a sequence-sharded cache: each model rank computes
     (max, sumexp, acc) over its C/ms slice; combine with pmax + psum of the
     tiny per-query stats — no cache movement."""
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.utils.jax_compat import shard_map
 
     B, m, Hq, Dk = q.shape
     Hkv = k.shape[2]

@@ -29,10 +29,10 @@ import math
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.utils.jax_compat import shard_map
 from repro.models.common import dense_init, mlp_apply, mlp_init
 from repro.sharding.partition import ShardCtx
 

@@ -106,6 +106,75 @@ def alloc_cache(cfg: ModelConfig, batch: int, capacity: int, dtype=None) -> dict
 
 
 
+# per-leaf rank of a single-sequence (no stacked-layer axes) cache entry;
+# any extra leading axes are layer stacks, so batch axis = ndim - base rank
+_BASE_NDIM = {"k": 4, "v": 4, "ck": 4, "cv": 4, "c": 3, "kr": 3,
+              "ssm": 4, "x": 3, "bc": 3}
+
+
+def merge_cache_row(cache: dict, one: dict, row: int) -> dict:
+    """Write the single-sequence cache ``one`` (batch=1, same capacity) into
+    batch row ``row`` of ``cache`` — slot admission for continuous batching.
+
+    The row is replaced wholesale (KV slots, positions, SSM states), so no
+    stale slot of the previous occupant survives: the admitted sequence's
+    prompt KV lives at slots ``0..P-1`` (``one`` was prefilled from
+    ``cur=0``), every other slot has ``pos=-1``, and attention masks by
+    position, not slot order.  The shared ring pointer advances to
+    ``max(cur, one_cur)`` so subsequent batch-wide decode writes land past
+    the admitted prompt; collisions can only occur once ``cur`` wraps the
+    capacity, i.e. capacity must cover the batch-lifetime token count (the
+    same contract as the non-recycling path).
+    """
+    from repro.utils.treeutil import tree_flatten_with_paths
+
+    flat = tree_flatten_with_paths(cache)
+    one_flat = dict(tree_flatten_with_paths(one))
+    merged = []
+    for path, leaf in flat:
+        src = one_flat[path]
+        name = path.split("/")[-1]
+        if name == "cur":
+            merged.append(jnp.maximum(leaf, src))
+            continue
+        lead = leaf.ndim - _BASE_NDIM[name] if path.startswith("layers/") else 0
+        idx = (slice(None),) * lead + (row,)
+        merged.append(leaf.at[idx].set(src[(slice(None),) * lead + (0,)]))
+    treedef = jax.tree_util.tree_structure(cache)
+    return jax.tree_util.tree_unflatten(treedef, merged)
+
+
+# recurrent (non-slot-addressed) state: advances in place each step, so an
+# inactive row's update must be rolled back rather than position-masked
+_RECURRENT = ("ssm", "x", "bc")
+
+
+def freeze_inactive_rows(new_cache: dict, old_cache: dict, active) -> dict:
+    """Roll back recurrent-state rows for sequences with ``active=False``.
+
+    KV caches are slot-addressed and masked by position, so a finished
+    sequence's writes can be made invisible by writing ``pos=-1``; SSM /
+    conv states are cumulative — stepping them with a PAD token pollutes the
+    row for later forced rollouts.  Restores the pre-step rows (tiny arrays:
+    per-layer state, not the KV cache) for ssm/hybrid caches; a no-op tree
+    for attention-only caches.
+    """
+    from repro.utils.treeutil import tree_flatten_with_paths
+
+    flat_new = tree_flatten_with_paths(new_cache)
+    old = dict(tree_flatten_with_paths(old_cache))
+    merged = []
+    for path, leaf in flat_new:
+        name = path.split("/")[-1]
+        if name in _RECURRENT:
+            lead = leaf.ndim - _BASE_NDIM[name]
+            mask = active.reshape((1,) * lead + (-1,) + (1,) * (leaf.ndim - lead - 1))
+            leaf = jnp.where(mask, leaf, old[path])
+        merged.append(leaf)
+    treedef = jax.tree_util.tree_structure(new_cache)
+    return jax.tree_util.tree_unflatten(treedef, merged)
+
+
 def cache_pspecs(cfg: ModelConfig, ctx: ShardCtx, cache) -> dict:
     """PartitionSpec pytree for a cache (for jit in/out shardings)."""
     if ctx.mesh is None:
@@ -148,9 +217,7 @@ def cache_pspecs(cfg: ModelConfig, ctx: ShardCtx, cache) -> dict:
         # count stacked lead axes: layers/<seg>/... entries have ndim-known
         lead = 0
         if parts[0] == "layers":
-            base_ndim = {"k": 4, "v": 4, "ck": 4, "cv": 4, "c": 3, "kr": 3,
-                         "ssm": 4, "x": 3, "bc": 3}[leafname]
-            lead = leaf.ndim - base_ndim
+            lead = leaf.ndim - _BASE_NDIM[leafname]
         specs.append(spec_for(leafname, leaf.ndim, lead))
     treedef = jax.tree_util.tree_structure(cache)
     return jax.tree_util.tree_unflatten(treedef, specs)

@@ -1,24 +1,50 @@
 """Batched reasoning-serving engine with EAT early exit.
 
-The engine drives a host-side loop around jitted step functions:
+Device-resident chunked decode (DESIGN.md §4.4 + this PR):
 
-  prefill -> [decode token -> (due?) EAT probe -> monitor update -> exit?]*
-          -> forced answer rollout (GenTillEoS with ``</think>`` appended)
+  prefill -> [decode_chunk]* -> forced answer rollout (GenTillEoS)
 
-Per-sequence adaptivity in a batched TPU loop (DESIGN.md §4.4): exited
-sequences stay in their slots with ``active=False`` — their sampled tokens
-are replaced by PAD, their monitor state freezes, and cache writes become
-don't-cares (nothing reads a finished sequence's future slots).
+``decode_chunk`` is ONE jitted dispatch that advances up to ``chunk_len``
+tokens with a ``jax.lax.while_loop`` whose body is the unified EAT step
+(``launch.serve_step.make_eat_step`` — the same program the dry-runs
+lower): sampling, the non-committing ``</think>``+prefix probe (under
+``lax.cond`` so chunks with no due evaluation pay zero probe FLOPs), the
+EMA monitor update, ``</think>`` detection, the token-budget check, and
+exit latching are all masked array ops.  The host syncs once per chunk
+(``state.active.any()``) instead of twice per token — the old per-token
+loop is kept as ``_reason_per_token`` and raced by
+``benchmarks/engine_throughput.py``.
+
+Per-sequence adaptivity in a batched TPU loop: exited sequences stay in
+their slots with ``active=False`` — their sampled tokens are replaced by
+PAD, their monitor state freezes, and cache writes become don't-cares
+(nothing reads a finished sequence's future slots).
+
+Continuous batching (``serve``): a slot-based admission queue on top of the
+chunked loop.  When a sequence exits early its result is harvested and its
+batch slot is immediately recycled: the next queued prompt is prefilled
+alone (B=1 ``start``) and row-merged into the live state —
+``cache.merge_cache_row`` overwrites the slot's KV rows/positions wholesale
+and advances the shared ring pointer to ``max(cur, prompt_len)``, so the
+admitted sequence's KV (slots ``0..P-1``) and its future decode writes
+(slots ``>= cur``) never collide until the ring wraps; ``EngineConfig
+.capacity`` must therefore cover the batch-lifetime token count, as in the
+per-batch setting.  The batch stays full under sustained traffic instead of
+draining to the slowest sequence.
 
 The same machinery provides the paper's evaluation harness:
 ``reason_with_trace`` generates one long chain and records, at every
 evaluation point, EAT / confidence / forced-rollout answers — the offline
-"simulated early exiting" protocol of App. H.
+"simulated early exiting" protocol of App. H.  It reuses the chunked step
+with ``chunk_len`` tuned to the evaluation schedule (1 for the paragraph
+schedule, ``every_n`` for the fixed-stride schedule) so its per-evaluation
+host hooks still fire between chunks.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+from collections import deque
 from typing import Callable, NamedTuple, Optional
 
 import jax
@@ -28,8 +54,9 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.eat import ProbeSpec, eval_eat
 from repro.core.monitor import MonitorState, ReasoningMonitor
+from repro.launch.serve_step import make_eat_step
 from repro.models.model import Model
-from repro.serving.cache import alloc_cache
+from repro.serving.cache import alloc_cache, freeze_inactive_rows, merge_cache_row
 from repro.serving.sampler import SamplerConfig, logprob_of, sample
 
 
@@ -54,6 +81,7 @@ class EngineConfig:
     end_think_id: int = 1
     newline_id: int = 2
     eos_id: int = 3
+    chunk_len: int = 32                  # decode steps per jitted dispatch
     sampler: SamplerConfig = dataclasses.field(default_factory=SamplerConfig)
 
 
@@ -83,40 +111,108 @@ class ReasoningEngine:
 
         self._positions = _positions
 
-        @jax.jit
-        def decode_fn(params, state: ServeState):
+        # the unified per-token program (shared with the dry-run lowering)
+        step_mon = make_eat_step(model, monitor, ecfg.sampler, probe_cond=True)
+        step_plain = make_eat_step(model, None, ecfg.sampler)
+
+        def _advance(params, state: ServeState, budget, step_fn) -> ServeState:
+            """One monitored decode step + engine bookkeeping, all masked."""
             tok = state.last_token[:, None]
-            pos1d = state.next_pos[:, None]
-            logits, cache = model.decode_step(
-                params, tok, _positions(pos1d), pos1d, state.cache
+            # inactive rows still ride through the batched step, but their
+            # KV write must be invisible: pos=-1 keeps the duplicate-position
+            # entry out of every later attention mask (q_pos >= kv_pos >= 0)
+            pos1d = jnp.where(state.active, state.next_pos, -1)[:, None]
+            nxt, cache, mon, stop, rng = step_fn(
+                params, state.cache, tok, pos1d, state.monitor,
+                state.active, state.rng,
             )
-            rng, sub = jax.random.split(state.rng)
-            nxt = sample(sub, logits[:, -1], cfg.vocab, ecfg.sampler)
+            if cfg.arch_type in ("ssm", "hybrid"):
+                cache = freeze_inactive_rows(cache, state.cache, state.active)
             nxt = jnp.where(state.active, nxt, ecfg.pad_id)
             ended = state.ended_think | (state.active & (nxt == ecfg.end_think_id))
-            # append at out_len via scatter
             out_tokens = state.out_tokens.at[
                 jnp.arange(nxt.shape[0]), state.out_len
-            ].set(jnp.where(state.active, nxt, ecfg.pad_id))
-            return state._replace(
+            ].set(nxt)
+            inc = state.active.astype(jnp.int32)
+            n_reasoning = state.n_reasoning + inc
+            over = n_reasoning >= budget
+            return ServeState(
                 cache=cache,
                 rng=rng,
-                next_pos=state.next_pos + state.active.astype(jnp.int32),
+                active=state.active & ~stop & ~ended & ~over,
+                next_pos=state.next_pos + inc,
                 last_token=nxt,
-                n_reasoning=state.n_reasoning + state.active.astype(jnp.int32),
+                n_reasoning=n_reasoning,
+                monitor=mon,
                 ended_think=ended,
                 out_tokens=out_tokens,
-                out_len=state.out_len + state.active.astype(jnp.int32),
+                out_len=state.out_len + inc,
             )
 
+        def _make_chunk(step_fn):
+            def chunk(params, state: ServeState, budget, chunk_len):
+                def cond(carry):
+                    i, st = carry
+                    return (i < chunk_len) & st.active.any()
+
+                def body(carry):
+                    i, st = carry
+                    return i + 1, _advance(params, st, budget, step_fn)
+
+                _, state = jax.lax.while_loop(
+                    cond, body, (jnp.zeros((), jnp.int32), state)
+                )
+                return state
+
+            return jax.jit(chunk)
+
+        self._chunk_mon = _make_chunk(step_mon)
+        self._chunk_plain = _make_chunk(step_plain)
+
+        @jax.jit
+        def decode_fn(params, state: ServeState):
+            """One unmonitored decode step — _advance with no budget (kept
+            as the per-token baseline for benchmarks/engine_throughput.py
+            and unit tests, so the two paths can never diverge)."""
+            no_budget = jnp.asarray(jnp.iinfo(jnp.int32).max, jnp.int32)
+            return _advance(params, state, no_budget, step_plain)
+
         self._decode_fn = decode_fn
+        # one persistent jit wrapper so start() (and every B=1 slot
+        # admission in serve()) reuses the compiled prefill per batch shape
+        self._prefill_fn = jax.jit(model.prefill)
 
-        if monitor is not None:
-            @jax.jit
-            def probe_fn(params, cache, next_pos):
-                return eval_eat(model, params, cache, monitor.probe, next_pos)
+        @jax.jit
+        def probe_fn(params, cache, next_pos):
+            return eval_eat(model, params, cache, monitor.probe, next_pos)
 
-            self._probe_fn = probe_fn
+        self._probe_fn = probe_fn
+
+        @jax.jit
+        def admit_fn(state: ServeState, one: ServeState, slot) -> ServeState:
+            """Recycle a batch slot: overwrite row ``slot`` of every per-
+            sequence array (and the cache row, see ``merge_cache_row``) with
+            the freshly-prefilled single-sequence state ``one``.  Jitted so
+            admission is one fused dispatch, not an eager op-by-op copy of
+            the whole cache."""
+
+            def put(big, small):
+                return big.at[slot].set(small[0])
+
+            return ServeState(
+                cache=merge_cache_row(state.cache, one.cache, slot),
+                rng=state.rng,
+                active=put(state.active, one.active),
+                next_pos=put(state.next_pos, one.next_pos),
+                last_token=put(state.last_token, one.last_token),
+                n_reasoning=put(state.n_reasoning, one.n_reasoning),
+                monitor=jax.tree_util.tree_map(put, state.monitor, one.monitor),
+                ended_think=put(state.ended_think, one.ended_think),
+                out_tokens=put(state.out_tokens, one.out_tokens),
+                out_len=put(state.out_len, one.out_len),
+            )
+
+        self._admit_fn = admit_fn
 
         @functools.partial(jax.jit, static_argnames=("n", "greedy"))
         def rollout_fn(params, cache, next_pos, last_token, rng, *, n: int,
@@ -168,7 +264,7 @@ class ReasoningEngine:
             )
             pos1d = jnp.concatenate([img_pos, jnp.where(pos1d >= 0, pos1d + n_img, -1)], 1)
         cache = alloc_cache(model.cfg, B, ecfg.capacity)
-        hidden, cache = jax.jit(model.prefill)(
+        hidden, cache = self._prefill_fn(
             self.params, prompts, self._positions(pos1d), pos1d, cache,
             frames=frames, image_embeds=image_embeds,
         )
@@ -194,14 +290,35 @@ class ReasoningEngine:
 
     # ------------------------------------------------------------- loop
     def reason(self, state: ServeState, *, max_tokens: int | None = None,
-               use_monitor: bool = True) -> ServeState:
+               use_monitor: bool = True,
+               chunk_len: int | None = None) -> ServeState:
         """Run the reasoning loop until all sequences exit (EAT stop, natural
-        </think>, or token budget)."""
+        </think>, or token budget).  Device-resident: each iteration is one
+        jitted ``decode_chunk`` dispatch advancing up to ``chunk_len``
+        tokens; the only host sync is the per-chunk ``active.any()``."""
+        budget = jnp.asarray(max_tokens or self.ecfg.max_reasoning_tokens,
+                             jnp.int32)
+        # chunk_len <= 0 would make the device loop a no-op and spin the
+        # host loop forever
+        chunk = jnp.asarray(max(1, chunk_len or self.ecfg.chunk_len), jnp.int32)
+        fn = self._chunk_mon if use_monitor else self._chunk_plain
+        while True:
+            state = fn(self.params, state, budget, chunk)
+            if not bool(state.active.any()):
+                break
+        return state
+
+    def _reason_per_token(self, state: ServeState, *,
+                          max_tokens: int | None = None,
+                          use_monitor: bool = True) -> ServeState:
+        """The pre-chunking host loop: one jitted dispatch per token plus two
+        host syncs per iteration.  Kept verbatim as the baseline for
+        ``benchmarks/engine_throughput.py``."""
         ecfg = self.ecfg
         budget = max_tokens or ecfg.max_reasoning_tokens
         while bool(state.active.any()) and int(state.n_reasoning.max()) < budget:
             state = self._decode_fn(self.params, state)
-            if self.monitor is not None and use_monitor:
+            if use_monitor:
                 due = self.monitor.due(state.monitor, state.last_token)
                 if bool((due & state.active).any()):
                     eat = self._probe_fn(self.params, state.cache, state.next_pos)
@@ -217,6 +334,99 @@ class ReasoningEngine:
             over = state.n_reasoning >= budget
             state = state._replace(active=state.active & ~exits & ~state.ended_think & ~over)
         return state
+
+    # ------------------------------------------------ continuous batching
+    def _admit(self, state: ServeState, one: ServeState, slot: int) -> ServeState:
+        """Recycle batch ``slot`` with the single-sequence state ``one``
+        (one jitted dispatch; ``slot`` is a traced scalar, so admissions
+        into different slots share the compilation)."""
+        return self._admit_fn(state, one, jnp.asarray(slot, jnp.int32))
+
+    def serve(self, prompts, prompt_len, rng, *, batch_size: int,
+              max_tokens: int | None = None, use_monitor: bool = True,
+              chunk_len: int | None = None, answer_len: int = 0) -> list[dict]:
+        """Continuous-batching serving loop over N requests with
+        ``batch_size`` slots.
+
+        prompts: (N, S) LEFT-padded; prompt_len: (N,).  Sequences that exit
+        early free their slot mid-flight: the result is harvested, the next
+        queued prompt is prefilled (B=1) and merged into the slot, and the
+        chunked decode resumes with the batch still full.  Returns one dict
+        per request (in request order): ``reasoning_tokens``,
+        ``n_reasoning``, ``ended_think``, and — when ``answer_len`` > 0 —
+        the greedy forced-answer ``answer_tokens`` produced from the
+        sequence's cache before its slot was recycled.
+        """
+        prompts = jnp.asarray(prompts)
+        prompt_len = jnp.asarray(prompt_len)
+        n_req = prompts.shape[0]
+        B = min(batch_size, n_req)
+        budget = jnp.asarray(max_tokens or self.ecfg.max_reasoning_tokens,
+                             jnp.int32)
+        chunk = jnp.asarray(max(1, chunk_len or self.ecfg.chunk_len), jnp.int32)
+        fn = self._chunk_mon if use_monitor else self._chunk_plain
+
+        queue = deque(range(B, n_req))
+        rng, sub = jax.random.split(rng)
+        state = self.start(prompts[:B], prompt_len[:B], sub)
+        slot_req: list[int | None] = list(range(B))
+        results: list[Optional[dict]] = [None] * n_req
+
+        def _check_capacity(when: str):
+            # cur advances one shared slot per batch-wide decode step and
+            # never rewinds; a wrap would silently overwrite live KV rows
+            used = int(state.cache["cur"])
+            if used + int(budget) > self.ecfg.capacity:
+                raise RuntimeError(
+                    f"EngineConfig.capacity={self.ecfg.capacity} cannot hold "
+                    f"{when}: {used} slots committed + up to {int(budget)} "
+                    f"decode steps would wrap the cache ring. Size capacity "
+                    f"to the batch-lifetime token count "
+                    f"(~prompt_width + ceil(n_requests / batch_size) * budget)."
+                )
+
+        _check_capacity("the initial batch")
+
+        while any(r is not None for r in slot_req):
+            if bool(state.active.any()):
+                state = fn(self.params, state, budget, chunk)
+            active_np = np.asarray(state.active)
+            done = [s for s, r in enumerate(slot_req)
+                    if r is not None and not active_np[s]]
+            if not done:
+                continue
+            # harvest results (answers roll out from the still-intact cache
+            # rows) BEFORE any slot is overwritten by an admission
+            ans = None
+            if answer_len:
+                toks, _ = self.force_answer(state, answer_len, greedy=True)
+                ans = np.asarray(toks)
+            out_tokens = np.asarray(state.out_tokens)
+            out_len = np.asarray(state.out_len)
+            n_reasoning = np.asarray(state.n_reasoning)
+            ended = np.asarray(state.ended_think)
+            for s in done:
+                r = slot_req[s]
+                rec = {
+                    "request": r,
+                    "reasoning_tokens": out_tokens[s, :out_len[s]].copy(),
+                    "n_reasoning": int(n_reasoning[s]),
+                    "ended_think": bool(ended[s]),
+                }
+                if ans is not None:
+                    rec["answer_tokens"] = ans[s].copy()
+                results[r] = rec
+                slot_req[s] = None
+            for s in done:
+                if not queue:
+                    continue
+                _check_capacity("another admission")
+                r = queue.popleft()
+                rng, sub = jax.random.split(rng)
+                one = self.start(prompts[r:r + 1], prompt_len[r:r + 1], sub)
+                state = self._admit(state, one, s)
+                slot_req[s] = r
+        return results
 
     # ------------------------------------------------------------- answers
     def force_answer(self, state: ServeState, n_tokens: int, rng=None,
@@ -249,18 +459,35 @@ class ReasoningEngine:
     ) -> tuple[ServeState, list[dict]]:
         """Generate one long chain; at every due point record EAT (and
         optionally K rollout answers + confidence).  The offline evaluation
-        protocol of App. H — no early exit is taken."""
+        protocol of App. H — no early exit is taken.
+
+        Reuses the device-resident chunk step with ``chunk_len`` matched to
+        the evaluation schedule (1 for the paragraph schedule — a due point
+        can fall on any token — ``every_n`` for the fixed stride), so the
+        per-evaluation host hooks below still run between chunks."""
         trace: list[dict] = []
         rng = state.rng
-        while bool(state.active.any()) and int(state.n_reasoning.max()) < max_tokens:
-            state = self._decode_fn(self.params, state)
-            due = (self.monitor.due(state.monitor, state.last_token)
-                   if self.monitor is not None
-                   else state.last_token == self.ecfg.newline_id)
-            if bool((due & state.active).any()):
+        newline_sched = self.monitor.schedule == "newline"
+        chunk = jnp.asarray(1 if newline_sched else self.monitor.every_n,
+                            jnp.int32)
+        budget = jnp.asarray(max_tokens, jnp.int32)
+        while bool(state.active.any()):
+            prev_n = state.n_reasoning
+            state = self._chunk_plain(self.params, state, budget, chunk)
+            if newline_sched:
+                due = state.last_token == self.monitor.newline_id
+            else:
+                due = jnp.ones_like(state.active)
+            # mask by "emitted a token this chunk", not post-chunk active:
+            # the chunk latches active=False in the same device step that
+            # reaches the budget, but the budget-th token's evaluation point
+            # still belongs in the trace (App. H records it)
+            emitted = state.n_reasoning > prev_n
+            due = due & emitted
+            if bool(due.any()):
                 rec: dict = {
                     "n_tokens": np.asarray(state.n_reasoning),
-                    "due": np.asarray(due & state.active),
+                    "due": np.asarray(due),
                     "eat": np.asarray(self.eval_eat_now(state)),
                 }
                 if rollout_k:
@@ -274,13 +501,11 @@ class ReasoningEngine:
                 if confidence_len:
                     _, lps = self.force_answer(state, confidence_len, greedy=True)
                     rec["confidence"] = np.asarray(jnp.exp(lps.mean(-1)))
-                if self.monitor is not None:
-                    mon = self.monitor.update(state.monitor, jnp.asarray(rec["eat"]),
-                                              due, state.active)
-                    state = state._replace(monitor=mon)
-                    rec["ema_var"] = np.asarray(
-                        self.monitor.stopper.debiased_var(mon.stop_state)
-                    )
+                mon = self.monitor.update(state.monitor, jnp.asarray(rec["eat"]),
+                                          due, emitted)
+                state = state._replace(monitor=mon)
+                rec["ema_var"] = np.asarray(
+                    self.monitor.stopper.debiased_var(mon.stop_state)
+                )
                 trace.append(rec)
-            state = state._replace(active=state.active & ~state.ended_think)
         return state, trace

@@ -103,6 +103,147 @@ def test_trace_records(engine, batch):
         assert "ema_var" in rec
 
 
+def test_chunked_matches_per_token_budget(engine, batch):
+    """The chunked device loop and the legacy host loop enforce the same
+    budget/exit semantics (stochastic sampling aside)."""
+    st = engine.start(jnp.asarray(batch["prompts"]), jnp.asarray(batch["prompt_len"]),
+                      jax.random.PRNGKey(8))
+    st = engine.reason(st, max_tokens=24, use_monitor=False, chunk_len=7)
+    assert not bool(np.asarray(st.active).any())
+    assert (np.asarray(st.n_reasoning) <= 24).all()
+    assert (np.asarray(st.out_len) == np.asarray(st.n_reasoning)).all()
+
+
+def _greedy_engine(every_n=4, delta=1e9, max_tokens=24, capacity=256):
+    """Deterministic engine: greedy sampling + stop at the first EAT eval
+    (delta huge), scheduled every `every_n` tokens."""
+    cfg = get_config("tiny")
+    model = Model(cfg, attn_impl="xla")
+    params = model.init(jax.random.PRNGKey(11))
+    ecfg = EngineConfig(
+        max_reasoning_tokens=max_tokens, capacity=capacity,
+        pad_id=Tokens.PAD, end_think_id=Tokens.END_THINK,
+        newline_id=Tokens.NEWLINE, eos_id=Tokens.EOS, chunk_len=8,
+        sampler=SamplerConfig(greedy=True),
+    )
+    monitor = ReasoningMonitor(
+        stopper=EATStopper(alpha=0.2, delta=delta),
+        probe=make_probe(Tokens.END_THINK, (Tokens.ANS,)),
+        schedule="every_n", every_n=every_n, min_evals=1,
+    )
+    return ReasoningEngine(model, params, ecfg, monitor)
+
+
+def test_serve_slot_recycling():
+    """Continuous batching: a sequence exiting early frees its slot and an
+    admitted prompt completes correctly in it (identical tokens to serving
+    that prompt alone, since decoding is greedy)."""
+    eng = _greedy_engine()
+    task = ChainTask()
+    b = task.serve_batch(np.random.default_rng(7), 5)
+    results = eng.serve(b["prompts"], b["prompt_len"], jax.random.PRNGKey(0),
+                        batch_size=2, max_tokens=24, answer_len=4)
+    assert all(r is not None for r in results)
+    assert [r["request"] for r in results] == list(range(5))
+    # every sequence stopped at the first due EAT eval (delta huge) unless
+    # it emitted </think> first
+    for r in results:
+        assert r["ended_think"] or r["n_reasoning"] <= 5
+        assert r["answer_tokens"].shape == (4,)
+        assert len(r["reasoning_tokens"]) == r["n_reasoning"]
+
+    # request 3 was only ever served in a recycled slot (batch_size=2);
+    # serving it alone must produce the identical greedy token stream
+    solo_state = eng.start(jnp.asarray(b["prompts"][3:4]),
+                           jnp.asarray(b["prompt_len"][3:4]),
+                           jax.random.PRNGKey(99))
+    solo_state = eng.reason(solo_state, max_tokens=24)
+    solo_tokens = np.asarray(solo_state.out_tokens)[0, :int(solo_state.out_len[0])]
+    np.testing.assert_array_equal(results[3]["reasoning_tokens"], solo_tokens)
+    solo_ans, _ = eng.force_answer(solo_state, 4, greedy=True)
+    np.testing.assert_array_equal(results[3]["answer_tokens"],
+                                  np.asarray(solo_ans)[0])
+
+
+def test_inactive_ride_along_preserves_rollout():
+    """A row that exits while its batch keeps decoding must produce the same
+    forced answer afterwards: its ride-along KV writes carry pos=-1, so no
+    later attention query can see them."""
+    eng = _greedy_engine(every_n=64, max_tokens=16)  # monitor never fires
+    task = ChainTask()
+    b = task.serve_batch(np.random.default_rng(5), 2)
+    st = eng.start(jnp.asarray(b["prompts"]), jnp.asarray(b["prompt_len"]),
+                   jax.random.PRNGKey(3))
+    st = st._replace(active=jnp.array([False, True]))   # row 0 exited
+    before, _ = eng.force_answer(st, 6, greedy=True)
+    st2 = eng.reason(st, max_tokens=16)                 # row 1 rides 15 steps
+    assert int(st2.n_reasoning[0]) == int(st.n_reasoning[0])
+    after, _ = eng.force_answer(st2, 6, greedy=True)
+    np.testing.assert_array_equal(np.asarray(before)[0], np.asarray(after)[0])
+
+
+def test_serve_capacity_guard():
+    """serve() refuses to wrap the shared cache ring instead of silently
+    overwriting live KV rows."""
+    eng = _greedy_engine(every_n=64, max_tokens=24, capacity=48)
+    task = ChainTask()
+    b = task.serve_batch(np.random.default_rng(4), 4)
+    with pytest.raises(RuntimeError, match="capacity"):
+        eng.serve(b["prompts"], b["prompt_len"], jax.random.PRNGKey(0),
+                  batch_size=2, max_tokens=24)
+
+
+def test_admit_preserves_resident_rows():
+    """Admitting into a freed slot must not perturb still-active rows: the
+    other row's greedy continuation is unchanged by the merge."""
+    eng = _greedy_engine(every_n=64, max_tokens=16)  # monitor never fires
+    task = ChainTask()
+    b = task.serve_batch(np.random.default_rng(9), 3)
+    st = eng.start(jnp.asarray(b["prompts"][:2]), jnp.asarray(b["prompt_len"][:2]),
+                   jax.random.PRNGKey(1))
+    ref = eng.reason(st, max_tokens=16)   # row 1's undisturbed rollout
+
+    one = eng.start(jnp.asarray(b["prompts"][2:3]), jnp.asarray(b["prompt_len"][2:3]),
+                    jax.random.PRNGKey(2))
+    st2 = eng._admit(st, one, 0)          # replace row 0 mid-flight
+    st2 = eng.reason(st2, max_tokens=16)
+    np.testing.assert_array_equal(np.asarray(ref.out_tokens)[1],
+                                  np.asarray(st2.out_tokens)[1])
+    assert int(st2.n_reasoning[1]) == int(ref.n_reasoning[1])
+
+
+def test_trace_records_final_budget_eval(engine, batch):
+    """The evaluation point at the budget-th token must appear in the trace
+    even though the chunk latches active=False in that same device step
+    (App. H records every due point of the full-length chain)."""
+    cfg = get_config("tiny")
+    model = Model(cfg, attn_impl="xla")
+    params = model.init(jax.random.PRNGKey(21))
+    ecfg = EngineConfig(
+        max_reasoning_tokens=9, capacity=128,
+        pad_id=Tokens.PAD, end_think_id=Tokens.END_THINK,
+        newline_id=Tokens.NEWLINE, eos_id=Tokens.EOS,
+        sampler=SamplerConfig(temperature=1.0, top_p=0.95),
+    )
+    monitor = ReasoningMonitor(
+        stopper=EATStopper(alpha=0.2, delta=0.0),
+        probe=make_probe(Tokens.END_THINK, (Tokens.ANS,)),
+        schedule="every_n", every_n=3,
+    )
+    eng = ReasoningEngine(model, params, ecfg, monitor)
+    task = ChainTask()
+    b = task.serve_batch(np.random.default_rng(2), 4)
+    st = eng.start(jnp.asarray(b["prompts"]), jnp.asarray(b["prompt_len"]),
+                   jax.random.PRNGKey(22))
+    st, trace = eng.reason_with_trace(st, max_tokens=9)
+    assert trace
+    survived = ~np.asarray(st.ended_think) & (np.asarray(st.n_reasoning) == 9)
+    assert survived.any()          # seeded: some rows reach the full budget
+    last = trace[-1]
+    assert (last["n_tokens"][survived] == 9).all()
+    assert last["due"][survived].all()
+
+
 def test_proxy_monitor_stream():
     cfg = get_config("tiny")
     model = Model(cfg, attn_impl="xla")

@@ -104,11 +104,12 @@ def test_uniform_logits_ce_is_log_vocab():
 
 def test_sharding_specs_pure_logic():
     """param_pspecs is computable without real devices (AbstractMesh)."""
-    from jax.sharding import AbstractMesh, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
     from repro.sharding.partition import ShardCtx, param_pspecs
     from repro.models import Model
+    from repro.utils.jax_compat import make_abstract_mesh
 
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    mesh = make_abstract_mesh((16, 16), ("data", "model"))
     ctx = ShardCtx(mesh=mesh, batch_axes=("data",))
     for arch in ["gemma-2b", "qwen3-1.7b", "deepseek-v2-236b", "mamba2-2.7b"]:
         cfg = get_config(arch)

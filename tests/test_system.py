@@ -90,22 +90,21 @@ def test_full_eat_serving_pipeline():
 def test_dryrun_builder_single_device():
     """The dry-run build path (specs, shardings off) works with mesh=None:
     lower the serve_step abstractly on CPU."""
-    from repro.core.ema import ema_init
-    from repro.core.stopping import EATState
     from repro.launch.input_specs import decode_specs
-    from repro.launch.serve_step import ServeStepConfig, make_serve_step
+    from repro.launch.serve_step import ServeStepConfig, make_serve_step, serve_monitor
     from repro.configs.base import InputShape
+    from repro.utils.jax_compat import cost_analysis_dict
 
     cfg = get_config("tiny")
     model = Model(cfg, attn_impl="xla")
     shape = InputShape("t", seq_len=32, global_batch=2, kind="decode")
     spec = decode_specs(cfg, shape)
-    step = make_serve_step(model, ServeStepConfig())
+    scfg = ServeStepConfig()
+    step = make_serve_step(model, scfg)
     params_struct = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
-    mon = EATState(ema=jax.eval_shape(lambda: ema_init(2)),
-                   last=jax.ShapeDtypeStruct((2,), jnp.float32))
+    mon = jax.eval_shape(lambda: serve_monitor(scfg).init(2))
     lowered = jax.jit(step).lower(
         params_struct, spec["cache"], spec["token"], spec["pos1d"], mon, spec["rng"]
     )
     compiled = lowered.compile()
-    assert compiled.cost_analysis().get("flops", 0) > 0
+    assert cost_analysis_dict(compiled).get("flops", 0) > 0
