@@ -1,4 +1,5 @@
-"""Engine decode throughput: per-token host loop vs device-resident chunks.
+"""Engine decode throughput: per-token host loop vs device-resident chunks,
+plus the data-parallel serve() scaling sweep.
 
 The per-token path dispatches one jitted step per token and syncs the host
 twice per iteration (``active.any()``, ``n_reasoning.max()``); the chunked
@@ -7,12 +8,22 @@ dispatch and syncs once per chunk.  Same tiny model, same sampler, same
 EAT monitor — the measured delta is pure dispatch + sync overhead, i.e.
 exactly what the probe-kernel work cannot recover from a host-bound loop.
 
+``--scaling`` runs the continuous-batching ``serve()`` loop on (N x 1)
+data-parallel meshes of 1/2/4/8 simulated host devices (one subprocess per
+device count — the device count is fixed at process start) and emits
+``BENCH_serve_scaling.json`` so the perf trajectory accumulates per PR.  On
+one physical CPU the simulated sweep measures sharding/dispatch overhead,
+not real speedup; on real chips the same harness measures both.
+
 Run:  PYTHONPATH=src python benchmarks/engine_throughput.py
       [--batch 8] [--budget 96] [--chunks 1 8 32] [--out artifacts/...json]
+      [--scaling] [--devices-list 1 2 4 8]
 """
 import argparse
 import json
 import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -29,12 +40,14 @@ from repro.serving.engine import EngineConfig, ReasoningEngine
 from repro.serving.sampler import SamplerConfig
 
 
-def build_engine(budget: int) -> ReasoningEngine:
+def build_engine(budget: int, ctx=None, capacity=None) -> ReasoningEngine:
     cfg = get_config("tiny")
-    model = Model(cfg, attn_impl="xla")
+    model = Model(cfg, attn_impl="xla") if ctx is None else \
+        Model(cfg, ctx, attn_impl="xla")
     params = model.init(jax.random.PRNGKey(0))
     ecfg = EngineConfig(
-        max_reasoning_tokens=budget, capacity=max(256, budget + 64),
+        max_reasoning_tokens=budget,
+        capacity=capacity if capacity is not None else max(256, budget + 64),
         pad_id=Tokens.PAD, end_think_id=Tokens.END_THINK,
         newline_id=Tokens.NEWLINE, eos_id=Tokens.EOS,
         sampler=SamplerConfig(temperature=1.0, top_p=0.95),
@@ -66,6 +79,88 @@ def measure(run, engine, batch, budget: int, reps: int) -> tuple[float, int]:
     return float(np.median(times)), tokens
 
 
+def run_serve_child(devices: int, batch_per_dev: int, budget: int,
+                    reps: int) -> dict:
+    """One point of the DP scaling sweep, inside a process whose device
+    count was fixed by XLA_FLAGS: weak scaling — global batch =
+    ``batch_per_dev * devices`` slots on an (N x 1) data-parallel mesh,
+    2x-oversubscribed request queue through ``serve()``."""
+    from repro.launch.mesh import make_device_ctx
+    from repro.serving.scheduler import SlotScheduler
+
+    assert len(jax.devices()) == devices, jax.devices()
+    B = batch_per_dev * devices
+    n_req = 2 * B
+    batch = ChainTask().serve_batch(np.random.default_rng(0), n_req)
+    capacity = SlotScheduler.required_capacity(
+        batch["prompts"].shape[1], n_req, B, budget
+    )
+    engine = build_engine(budget, ctx=make_device_ctx(devices, 1),
+                          capacity=capacity)
+
+    times, tokens = [], 0
+    for rep in range(reps + 1):        # rep 0 = compile warmup
+        t0 = time.perf_counter()
+        results = engine.serve(batch["prompts"], batch["prompt_len"],
+                               jax.random.PRNGKey(100 + rep), batch_size=B,
+                               max_tokens=budget)
+        if rep:
+            times.append(time.perf_counter() - t0)
+            tokens = int(sum(r["n_reasoning"] for r in results))
+    sec = float(np.median(times))
+    return {"devices": devices, "batch": B, "requests": n_req,
+            "budget": budget, "seconds": sec, "tokens": tokens,
+            "tokens_per_s": tokens / sec}
+
+
+def run_scaling_sweep(args) -> dict:
+    """Fan the sweep out one subprocess per device count (the simulated
+    device count is fixed at jax import) and collect
+    ``BENCH_serve_scaling.json``."""
+    points = []
+    for n in args.devices_list:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.join(os.path.dirname(__file__), "..", "src")]
+            + [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p]
+        )
+        cmd = [sys.executable, os.path.abspath(__file__), "--serve-child",
+               str(n), "--batch", str(args.batch),
+               "--budget", str(args.budget), "--reps", str(args.reps)]
+        r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                           timeout=1200)
+        if r.returncode != 0:
+            raise RuntimeError(f"scaling child devices={n} failed:\n"
+                               f"{r.stdout}\n{r.stderr}")
+        line = [ln for ln in r.stdout.splitlines()
+                if ln.startswith("SCALING_RESULT ")][-1]
+        rec = json.loads(line[len("SCALING_RESULT "):])
+        points.append(rec)
+        print(f"devices={rec['devices']:2d}  batch={rec['batch']:3d}  "
+              f"{rec['tokens_per_s']:8.0f} tok/s", flush=True)
+    # baseline = the true 1-device point when the sweep includes it; else
+    # the smallest device count (and the key says so)
+    base_pt = next((p for p in points if p["devices"] == 1),
+                   min(points, key=lambda p: p["devices"]))
+    key = ("speedup_vs_1dev" if base_pt["devices"] == 1
+           else f"speedup_vs_{base_pt['devices']}dev")
+    for p in points:
+        p[key] = p["tokens_per_s"] / base_pt["tokens_per_s"]
+        print(f"devices={p['devices']:2d}  {key}={p[key]:5.2f}x", flush=True)
+    out = {"sweep": "serve_dp_weak_scaling", "batch_per_device": args.batch,
+           "budget": args.budget, "points": points}
+    path = args.out or os.path.join(
+        os.path.dirname(__file__), "..", "artifacts",
+        "BENCH_serve_scaling.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {os.path.normpath(path)}")
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=8)
@@ -73,7 +168,26 @@ def main():
     ap.add_argument("--reps", type=int, default=3)
     ap.add_argument("--chunks", type=int, nargs="+", default=[1, 8, 32])
     ap.add_argument("--out", default=None)
+    ap.add_argument("--scaling", action="store_true",
+                    help="run the data-parallel serve() scaling sweep over "
+                         "--devices-list simulated host devices")
+    ap.add_argument("--devices-list", type=int, nargs="+", default=[1, 2, 4, 8])
+    ap.add_argument("--serve-child", type=int, default=0,
+                    help=argparse.SUPPRESS)   # internal: one sweep point
     args = ap.parse_args()
+
+    if args.reps < 1:
+        # every path medians over the timed reps: zero reps would write
+        # NaN seconds/tok/s into the artifact without erroring
+        ap.error("--reps must be >= 1 (rep 0 is compile warmup)")
+
+    if args.serve_child:
+        rec = run_serve_child(args.serve_child, args.batch, args.budget,
+                              args.reps)
+        print("SCALING_RESULT " + json.dumps(rec))
+        return rec
+    if args.scaling:
+        return run_scaling_sweep(args)
 
     engine = build_engine(args.budget)
     batch = ChainTask().serve_batch(np.random.default_rng(0), args.batch)

@@ -33,13 +33,12 @@ from repro.configs import ASSIGNED_ARCHS        # noqa: E402
 from repro.configs.base import INPUT_SHAPES, get_config      # noqa: E402
 from repro.launch import input_specs as ispec   # noqa: E402
 from repro.launch.mesh import make_ctx          # noqa: E402
-from repro.launch.serve_step import (           # noqa: E402
-    ServeStepConfig,
-    make_serve_step,
-    serve_monitor,
-)
 from repro.models.model import Model            # noqa: E402
 from repro.serving.cache import cache_pspecs    # noqa: E402
+from repro.serving.executor import (            # noqa: E402
+    ServeStepConfig,
+    build_serve_step_program,
+)
 from repro.utils.jax_compat import cost_analysis_dict        # noqa: E402
 from repro.sharding.partition import param_pspecs            # noqa: E402
 from repro.training.optimizer import OptState   # noqa: E402
@@ -216,25 +215,16 @@ def build_lowerable(arch: str, shape_name: str, multi_pod: bool,
         jitted = jax.jit(prefill_fn, in_shardings=tuple(in_sh), donate_argnums=4)
         return (lambda: jitted.lower(*args)), "prefill"
 
-    # decode
+    # decode: lower the EXECUTOR's serve-step program — the same definition
+    # the engine's device-resident chunks scan, so what the roofline costs
+    # out is what serving dispatches (shardings + cache donation included)
     spec = ispec.decode_specs(cfg, shape)
     cache_struct = spec["cache"]
-    cspec = cache_pspecs(cfg, ctx, cache_struct)
-    B = shape.global_batch
     scfg = ServeStepConfig(window=window,
                            fused_probe=variant.get("fused_probe", False))
-    serve_step = make_serve_step(model, scfg)
-    mon_struct = jax.eval_shape(lambda: serve_monitor(scfg).init(B))
-    mon_spec = jax.tree_util.tree_map(lambda _: P(b), mon_struct)
-    in_sh = (
-        psh,
-        _shardings(ctx, cspec),
-        NamedSharding(ctx.mesh, P(b, None)),
-        NamedSharding(ctx.mesh, P(b, None)),
-        _shardings(ctx, mon_spec),
-        NamedSharding(ctx.mesh, P()),
+    jitted, mon_struct = build_serve_step_program(
+        model, scfg, cache_struct, params_struct
     )
-    jitted = jax.jit(serve_step, in_shardings=in_sh, donate_argnums=1)
     return (
         lambda: jitted.lower(
             params_struct, cache_struct, spec["token"], spec["pos1d"],

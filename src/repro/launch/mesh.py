@@ -25,6 +25,20 @@ def make_ctx(*, multi_pod: bool = False) -> ShardCtx:
     return ShardCtx(mesh=mesh, batch_axes=batch_axes, model_axis="model")
 
 
+def make_device_ctx(data: int, model: int, *, fsdp: bool = False) -> ShardCtx:
+    """(data x model) mesh over the currently visible devices — real chips
+    or ``--xla_force_host_platform_device_count`` simulated ones (the
+    mesh-equivalence tests and the DP scaling benchmark use the latter).
+
+    Serving default is ``fsdp=False``: decode re-gathers every weight every
+    step under FSDP, so weights are replicated over ``data`` and only
+    tensor-parallel over ``model`` (see ``ShardCtx.fsdp``).
+    """
+    mesh = jax.make_mesh((data, model), ("data", "model"))
+    return ShardCtx(mesh=mesh, batch_axes=("data",), model_axis="model",
+                    fsdp=fsdp)
+
+
 def local_ctx() -> ShardCtx:
     """Single-device ctx for CPU tests/examples."""
     return ShardCtx(mesh=None)

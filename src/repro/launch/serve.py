@@ -20,7 +20,7 @@ from repro.core.eat import make_probe
 from repro.core.monitor import ReasoningMonitor
 from repro.core.stopping import EATStopper
 from repro.data.synthetic import ChainTask, Tokens
-from repro.launch.mesh import local_ctx, make_ctx
+from repro.launch.mesh import local_ctx, make_ctx, make_device_ctx
 from repro.models import Model
 from repro.serving.engine import EngineConfig, ReasoningEngine
 from repro.serving.sampler import SamplerConfig
@@ -37,6 +37,15 @@ def main():
     ap.add_argument("--budget", type=int, default=96)
     ap.add_argument("--local", action="store_true")
     ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
+                    help="serve on a (data x model) mesh over the visible "
+                         "devices, e.g. --mesh 4x2 (overrides --local / the "
+                         "production mesh)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k sampling cutoff (0 = off)")
+    ap.add_argument("--min-p", type=float, default=0.0,
+                    help="min-p sampling cutoff relative to the max-prob "
+                         "token (0 = off)")
     ap.add_argument("--chunk", type=int, default=32,
                     help="decode steps per jitted dispatch")
     ap.add_argument("--requests", type=int, default=0,
@@ -45,7 +54,13 @@ def main():
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
-    ctx = local_ctx() if args.local else make_ctx(multi_pod=args.multipod)
+    if args.mesh:
+        d, m = (int(x) for x in args.mesh.lower().split("x"))
+        ctx = make_device_ctx(d, m)
+    elif args.local:
+        ctx = local_ctx()
+    else:
+        ctx = make_ctx(multi_pod=args.multipod)
     model = Model(cfg, ctx, attn_impl="xla")
     if args.ckpt:
         like = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
@@ -58,7 +73,8 @@ def main():
         max_reasoning_tokens=args.budget, capacity=args.budget + 128,
         pad_id=Tokens.PAD, end_think_id=Tokens.END_THINK,
         newline_id=Tokens.NEWLINE, eos_id=Tokens.EOS,
-        sampler=SamplerConfig(temperature=0.6, top_p=0.95),
+        sampler=SamplerConfig(temperature=0.6, top_p=0.95,
+                              top_k=args.top_k, min_p=args.min_p),
     )
     monitor = ReasoningMonitor(
         stopper=EATStopper(alpha=args.alpha, delta=args.delta),
@@ -74,11 +90,12 @@ def main():
         # early-exiting sequences free their slot for the next prompt.  The
         # shared ring pointer advances for the whole run, so capacity must
         # cover the batch-lifetime worst case, not one budget.
-        import math
+        from repro.serving.scheduler import SlotScheduler
 
         batch = task.serve_batch(np.random.default_rng(0), args.requests)
-        cohorts = math.ceil(args.requests / args.batch) + 1
-        ecfg.capacity = batch["prompts"].shape[1] + cohorts * args.budget
+        ecfg.capacity = SlotScheduler.required_capacity(
+            batch["prompts"].shape[1], args.requests, args.batch, args.budget
+        )
         results = engine.serve(batch["prompts"], batch["prompt_len"],
                                jax.random.PRNGKey(0), batch_size=args.batch,
                                answer_len=4)

@@ -1,132 +1,23 @@
-"""The jitted EAT-monitored decode step — ONE program, two drivers.
+"""Compat shim — the serve-step programs live in ``repro.serving.executor``.
 
-``make_eat_step`` builds the canonical single-token serving step: next-token
-sampling, the non-committing ``</think>``+prefix probe, the fused entropy
-reduction, the EMA mean/variance update, and the latched early-exit decision,
-all as masked array ops over a ``MonitorState``.  It is the shared core that
+The canonical single-token EAT step (``make_eat_step``) and the dry-run's
+lowerable program (``build_serve_step_program``) moved into the executor
+layer so exactly ONE serve-step definition exists in the tree: the program
+the decode-shape dry-runs lower and cost out is the program the engine's
+device-resident chunks dispatch.
 
-  * the decode-shape dry-runs lower (via ``make_serve_step``, which fixes
-    ``active = ones`` and an every-token evaluation schedule), and
-  * ``ReasoningEngine`` scans inside its device-resident ``decode_chunk``
-    (``jax.lax.while_loop`` over this step, one host sync per chunk).
-
-so the program the roofline analyses cost out is the program the engine
-actually dispatches.
-
-Per-sequence adaptivity in a batched SPMD step: finished sequences ride
-along with ``active=False`` — their monitor state freezes (``update`` masks
-by ``due & active``) and their cache writes are don't-cares (nothing reads a
-finished sequence's future slots).
+Note this is a partial shim: the old ``make_serve_step`` (bare step
+function, no jit/shardings) was deliberately REMOVED, not re-exported —
+its jitting lived in ``launch.dryrun``, which is exactly the duplicate
+program construction this refactor eliminates.  Callers lower
+``build_serve_step_program`` instead.
 """
-from __future__ import annotations
+from repro.serving.executor import (  # noqa: F401
+    ServeStepConfig,
+    build_serve_step_program,
+    make_eat_step,
+    serve_monitor,
+)
 
-import dataclasses
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.eat import ProbeSpec, eval_eat
-from repro.core.monitor import MonitorState, ReasoningMonitor
-from repro.core.stopping import EATStopper
-from repro.models.model import Model
-from repro.serving.sampler import SamplerConfig, sample
-
-
-@dataclasses.dataclass(frozen=True)
-class ServeStepConfig:
-    window: int = 0
-    probe: ProbeSpec = ProbeSpec((1, 6))        # </think> + "final answer:" prefix
-    stopper: EATStopper = EATStopper(alpha=0.2, delta=1e-3)
-    sampler: SamplerConfig = SamplerConfig()
-    with_probe: bool = True
-    # §Perf: fuse the probe into the decode forward (one weight pass per
-    # step instead of two; see Model.decode_and_probe)
-    fused_probe: bool = False
-
-
-def serve_monitor(scfg: ServeStepConfig) -> ReasoningMonitor:
-    """The dry-run's evaluation schedule: probe every token, no warmup —
-    the most expensive (upper-bound) configuration of the monitored step."""
-    return ReasoningMonitor(stopper=scfg.stopper, probe=scfg.probe,
-                            schedule="every_n", every_n=1, min_evals=0)
-
-
-def make_eat_step(
-    model: Model,
-    monitor: ReasoningMonitor | None,
-    sampler: SamplerConfig,
-    *,
-    window: int | None = None,
-    probe_cond: bool = True,
-    fused_probe: bool = False,
-):
-    """Build ``step(params, cache, token, pos1d, mon, active, rng)``
-    -> ``(next_token, cache, mon, stop, rng)``.
-
-    token/pos1d: (B,1); mon: MonitorState; active: (B,) bool.  ``stop`` is
-    the latched per-sequence exit mask (``mon.stop_flag``).
-
-    ``probe_cond=True`` wraps the probe+update in ``lax.cond`` on
-    ``(due & active).any()`` so chunks where no sequence hits an evaluation
-    point pay zero probe FLOPs (the engine's sparse-schedule case);
-    ``probe_cond=False`` probes unconditionally (the dry-run's every-token
-    schedule, where the cond would always take the probe branch anyway).
-    """
-    cfg = model.cfg
-
-    def _positions(pos1d):
-        if cfg.mrope_sections:
-            return jnp.broadcast_to(pos1d[..., None], pos1d.shape + (3,))
-        return pos1d
-
-    def step(params, cache, token, pos1d, mon: MonitorState, active, rng):
-        if monitor is not None and fused_probe:
-            B = token.shape[0]
-            m = len(monitor.probe)
-            probe_toks = jnp.broadcast_to(
-                jnp.asarray(monitor.probe.tokens, jnp.int32), (B, m)
-            )
-            pos_all = pos1d[:, :1] + jnp.arange(1 + m, dtype=jnp.int32)[None]
-            logits, eat, cache = model.decode_and_probe(
-                params, token, _positions(pos_all), pos_all, cache, probe_toks,
-                window=window,
-            )
-            rng, sub = jax.random.split(rng)
-            nxt = sample(sub, logits[:, -1], cfg.vocab, sampler)
-            mon = monitor.update(mon, eat, monitor.due(mon, nxt), active)
-            return nxt, cache, mon, mon.stop_flag, rng
-
-        logits, cache = model.decode_step(
-            params, token, _positions(pos1d), pos1d, cache, window=window
-        )
-        rng, sub = jax.random.split(rng)
-        nxt = sample(sub, logits[:, -1], cfg.vocab, sampler)
-        if monitor is None:
-            return nxt, cache, mon, jnp.zeros(nxt.shape, bool), rng
-
-        next_pos = pos1d[:, -1] + 1
-        eat_fn = lambda: eval_eat(model, params, cache, monitor.probe, next_pos)  # noqa: E731
-        mon = monitor.observe(mon, eat_fn, nxt, active, lazy=probe_cond)
-        return nxt, cache, mon, mon.stop_flag, rng
-
-    return step
-
-
-def make_serve_step(model: Model, scfg: ServeStepConfig):
-    """Dry-run adapter: the 6-arg signature the roofline shapes lower.
-
-    ``mon`` is a ``MonitorState`` (see ``serve_monitor`` for the struct);
-    all sequences are treated as active.
-    """
-    monitor = serve_monitor(scfg) if scfg.with_probe else None
-    step = make_eat_step(
-        model, monitor, scfg.sampler, window=scfg.window,
-        probe_cond=False, fused_probe=scfg.fused_probe,
-    )
-
-    def serve_step(params, cache, token, pos1d, mon: MonitorState, rng):
-        """token/pos1d: (B,1).  Returns (next_token, cache, mon, stop, rng)."""
-        active = jnp.ones(token.shape[:1], bool)
-        return step(params, cache, token, pos1d, mon, active, rng)
-
-    return serve_step
+__all__ = ["ServeStepConfig", "build_serve_step_program", "make_eat_step",
+           "serve_monitor"]

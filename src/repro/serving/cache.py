@@ -184,7 +184,7 @@ def cache_pspecs(cfg: ModelConfig, ctx: ShardCtx, cache) -> dict:
     kv_on_model = cfg.n_kv_heads % ms == 0 and cfg.mla is None
     # batch=1 shapes (long_500k) cannot shard the batch axis
     bsz = cache["pos"].shape[0] if hasattr(cache["pos"], "shape") else 1
-    b = ctx.batch_spec_entry() if bsz % ctx.data_size == 0 else None
+    b = ctx.batch_entry_for(bsz)
 
     def spec_for(path_leaf: str, ndim: int, lead: int) -> P:
         # lead = number of stacked layer axes before the batch axis

@@ -1,76 +1,59 @@
-"""Batched reasoning-serving engine with EAT early exit.
+"""Reasoning-serving facade over the layered serving stack.
 
-Device-resident chunked decode (DESIGN.md §4.4 + this PR):
+The engine is now a thin orchestration layer; the real machinery lives in
+three modules (DESIGN.md §4.4 + this PR's refactor):
 
-  prefill -> [decode_chunk]* -> forced answer rollout (GenTillEoS)
+  * ``serving/request.py``   — per-request lifecycle state machine
+    (QUEUED -> PREFILLING -> DECODING -> EXITED/EXHAUSTED) carrying the EAT
+    trace and exit-reason metadata,
+  * ``serving/scheduler.py`` — slot allocation + FIFO admission policy for
+    continuous batching (pure host Python, no jax),
+  * ``serving/executor.py``  — every jitted device program (prefill,
+    chunked decode with the inlined probe/monitor, admit, rollout, probe),
+    built with explicit shardings from ``serve_state_pspecs`` /
+    ``cache_pspecs`` and with the ServeState/cache DONATED so chunked
+    decode updates the KV cache in place instead of re-allocating it.
 
-``decode_chunk`` is ONE jitted dispatch that advances up to ``chunk_len``
-tokens with a ``jax.lax.while_loop`` whose body is the unified EAT step
-(``launch.serve_step.make_eat_step`` — the same program the dry-runs
-lower): sampling, the non-committing ``</think>``+prefix probe (under
-``lax.cond`` so chunks with no due evaluation pay zero probe FLOPs), the
-EMA monitor update, ``</think>`` detection, the token-budget check, and
-exit latching are all masked array ops.  The host syncs once per chunk
-(``state.active.any()``) instead of twice per token — the old per-token
-loop is kept as ``_reason_per_token`` and raced by
-``benchmarks/engine_throughput.py``.
+``ReasoningEngine`` keeps the pre-refactor API (``start`` / ``reason`` /
+``serve`` / ``force_answer`` / ``reason_with_trace`` ...) so examples,
+benchmarks, and tests are untouched.  With a mesh on ``model.ctx`` the same
+calls run data-parallel over batch rows and tensor-parallel over heads —
+``tests/test_mesh_serve.py`` pins 8-way simulated-mesh ``serve()`` to the
+single-device token stream.
+
+Donation contract (inherited from the executor): ``reason()``, ``serve()``
+and ``_admit()`` consume the ServeState they are handed — continue from the
+returned state; the passed-in one is dead.
 
 Per-sequence adaptivity in a batched TPU loop: exited sequences stay in
 their slots with ``active=False`` — their sampled tokens are replaced by
 PAD, their monitor state freezes, and cache writes become don't-cares
 (nothing reads a finished sequence's future slots).
 
-Continuous batching (``serve``): a slot-based admission queue on top of the
-chunked loop.  When a sequence exits early its result is harvested and its
-batch slot is immediately recycled: the next queued prompt is prefilled
-alone (B=1 ``start``) and row-merged into the live state —
-``cache.merge_cache_row`` overwrites the slot's KV rows/positions wholesale
-and advances the shared ring pointer to ``max(cur, prompt_len)``, so the
-admitted sequence's KV (slots ``0..P-1``) and its future decode writes
-(slots ``>= cur``) never collide until the ring wraps; ``EngineConfig
-.capacity`` must therefore cover the batch-lifetime token count, as in the
-per-batch setting.  The batch stays full under sustained traffic instead of
-draining to the slowest sequence.
-
 The same machinery provides the paper's evaluation harness:
 ``reason_with_trace`` generates one long chain and records, at every
 evaluation point, EAT / confidence / forced-rollout answers — the offline
-"simulated early exiting" protocol of App. H.  It reuses the chunked step
-with ``chunk_len`` tuned to the evaluation schedule (1 for the paragraph
-schedule, ``every_n`` for the fixed-stride schedule) so its per-evaluation
-host hooks still fire between chunks.
+"simulated early exiting" protocol of App. H.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from collections import deque
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
-from repro.core.eat import ProbeSpec, eval_eat
-from repro.core.monitor import MonitorState, ReasoningMonitor
-from repro.launch.serve_step import make_eat_step
+from repro.core.eat import ProbeSpec
+from repro.core.monitor import ReasoningMonitor
 from repro.models.model import Model
-from repro.serving.cache import alloc_cache, freeze_inactive_rows, merge_cache_row
-from repro.serving.sampler import SamplerConfig, logprob_of, sample
+from repro.serving.cache import alloc_cache
+from repro.serving.executor import Executor, ServeState, positions_for
+from repro.serving.request import Request
+from repro.serving.sampler import SamplerConfig, sample
+from repro.serving.scheduler import SlotScheduler
 
-
-class ServeState(NamedTuple):
-    cache: dict
-    rng: jax.Array
-    active: jax.Array          # (B,) still reasoning
-    next_pos: jax.Array        # (B,) next token position (left-pad aware)
-    last_token: jax.Array      # (B,)
-    n_reasoning: jax.Array     # (B,) reasoning tokens generated
-    monitor: MonitorState
-    ended_think: jax.Array     # (B,) emitted </think> naturally
-    out_tokens: jax.Array      # (B, T_buf) generated reasoning tokens
-    out_len: jax.Array         # (B,)
+__all__ = ["EngineConfig", "ReasoningEngine", "ServeState"]
 
 
 @dataclasses.dataclass
@@ -93,7 +76,6 @@ class ReasoningEngine:
         from repro.core.stopping import EATStopper
 
         self.model = model
-        self.params = params
         self.ecfg = ecfg
         if monitor is None:
             monitor = ReasoningMonitor(
@@ -102,147 +84,18 @@ class ReasoningEngine:
                 newline_id=ecfg.newline_id,
             )
         self.monitor = monitor
-        cfg = model.cfg
+        self.executor = Executor(model, params, ecfg, monitor)
+        # place params on the mesh once so per-dispatch in_shardings never
+        # re-transfer them (no-op on single device)
+        self.params = self.executor.shard_params(params)
 
-        def _positions(pos1d):
-            if cfg.mrope_sections:
-                return jnp.broadcast_to(pos1d[..., None], pos1d.shape + (3,))
-            return pos1d
+    def _positions(self, pos1d):
+        return positions_for(self.model.cfg, pos1d)
 
-        self._positions = _positions
-
-        # the unified per-token program (shared with the dry-run lowering)
-        step_mon = make_eat_step(model, monitor, ecfg.sampler, probe_cond=True)
-        step_plain = make_eat_step(model, None, ecfg.sampler)
-
-        def _advance(params, state: ServeState, budget, step_fn) -> ServeState:
-            """One monitored decode step + engine bookkeeping, all masked."""
-            tok = state.last_token[:, None]
-            # inactive rows still ride through the batched step, but their
-            # KV write must be invisible: pos=-1 keeps the duplicate-position
-            # entry out of every later attention mask (q_pos >= kv_pos >= 0)
-            pos1d = jnp.where(state.active, state.next_pos, -1)[:, None]
-            nxt, cache, mon, stop, rng = step_fn(
-                params, state.cache, tok, pos1d, state.monitor,
-                state.active, state.rng,
-            )
-            if cfg.arch_type in ("ssm", "hybrid"):
-                cache = freeze_inactive_rows(cache, state.cache, state.active)
-            nxt = jnp.where(state.active, nxt, ecfg.pad_id)
-            ended = state.ended_think | (state.active & (nxt == ecfg.end_think_id))
-            out_tokens = state.out_tokens.at[
-                jnp.arange(nxt.shape[0]), state.out_len
-            ].set(nxt)
-            inc = state.active.astype(jnp.int32)
-            n_reasoning = state.n_reasoning + inc
-            over = n_reasoning >= budget
-            return ServeState(
-                cache=cache,
-                rng=rng,
-                active=state.active & ~stop & ~ended & ~over,
-                next_pos=state.next_pos + inc,
-                last_token=nxt,
-                n_reasoning=n_reasoning,
-                monitor=mon,
-                ended_think=ended,
-                out_tokens=out_tokens,
-                out_len=state.out_len + inc,
-            )
-
-        def _make_chunk(step_fn):
-            def chunk(params, state: ServeState, budget, chunk_len):
-                def cond(carry):
-                    i, st = carry
-                    return (i < chunk_len) & st.active.any()
-
-                def body(carry):
-                    i, st = carry
-                    return i + 1, _advance(params, st, budget, step_fn)
-
-                _, state = jax.lax.while_loop(
-                    cond, body, (jnp.zeros((), jnp.int32), state)
-                )
-                return state
-
-            return jax.jit(chunk)
-
-        self._chunk_mon = _make_chunk(step_mon)
-        self._chunk_plain = _make_chunk(step_plain)
-
-        @jax.jit
-        def decode_fn(params, state: ServeState):
-            """One unmonitored decode step — _advance with no budget (kept
-            as the per-token baseline for benchmarks/engine_throughput.py
-            and unit tests, so the two paths can never diverge)."""
-            no_budget = jnp.asarray(jnp.iinfo(jnp.int32).max, jnp.int32)
-            return _advance(params, state, no_budget, step_plain)
-
-        self._decode_fn = decode_fn
-        # one persistent jit wrapper so start() (and every B=1 slot
-        # admission in serve()) reuses the compiled prefill per batch shape
-        self._prefill_fn = jax.jit(model.prefill)
-
-        @jax.jit
-        def probe_fn(params, cache, next_pos):
-            return eval_eat(model, params, cache, monitor.probe, next_pos)
-
-        self._probe_fn = probe_fn
-
-        @jax.jit
-        def admit_fn(state: ServeState, one: ServeState, slot) -> ServeState:
-            """Recycle a batch slot: overwrite row ``slot`` of every per-
-            sequence array (and the cache row, see ``merge_cache_row``) with
-            the freshly-prefilled single-sequence state ``one``.  Jitted so
-            admission is one fused dispatch, not an eager op-by-op copy of
-            the whole cache."""
-
-            def put(big, small):
-                return big.at[slot].set(small[0])
-
-            return ServeState(
-                cache=merge_cache_row(state.cache, one.cache, slot),
-                rng=state.rng,
-                active=put(state.active, one.active),
-                next_pos=put(state.next_pos, one.next_pos),
-                last_token=put(state.last_token, one.last_token),
-                n_reasoning=put(state.n_reasoning, one.n_reasoning),
-                monitor=jax.tree_util.tree_map(put, state.monitor, one.monitor),
-                ended_think=put(state.ended_think, one.ended_think),
-                out_tokens=put(state.out_tokens, one.out_tokens),
-                out_len=put(state.out_len, one.out_len),
-            )
-
-        self._admit_fn = admit_fn
-
-        @functools.partial(jax.jit, static_argnames=("n", "greedy"))
-        def rollout_fn(params, cache, next_pos, last_token, rng, *, n: int,
-                       greedy: bool = False):
-            """Forced answer rollout: append </think> then generate n tokens.
-            Cache changes are local to this call (functional).  Returns
-            (tokens (B,n), logprobs (B,n))."""
-            B = next_pos.shape[0]
-            et = jnp.full((B, 1), ecfg.end_think_id, jnp.int32)
-            pos1d = next_pos[:, None]
-            logits, cache2 = model.decode_step(params, et, _positions(pos1d), pos1d, cache)
-            scfg = dataclasses.replace(ecfg.sampler, greedy=greedy)
-
-            def step(carry, _):
-                cache_c, pos_c, logit_c, rng_c = carry
-                rng_c, sub = jax.random.split(rng_c)
-                tok = sample(sub, logit_c, cfg.vocab, scfg)
-                lp = logprob_of(logit_c, tok, cfg.vocab)
-                p1 = pos_c[:, None]
-                lg, cache_c = model.decode_step(
-                    params, tok[:, None], _positions(p1), p1, cache_c
-                )
-                return (cache_c, pos_c + 1, lg[:, -1], rng_c), (tok, lp)
-
-            (_, _, _, _), (toks, lps) = jax.lax.scan(
-                step, (cache2, next_pos + 1, logits[:, -1], rng), None, length=n
-            )
-            return jnp.moveaxis(toks, 0, 1), jnp.moveaxis(lps, 0, 1)
-
-        self._rollout_fn = rollout_fn
+    # engine internals the benchmarks/tests poke at, now delegated
+    @property
+    def _decode_fn(self):
+        return self.executor.decode_step
 
     # ------------------------------------------------------------- prefill
     def start(self, prompts: jax.Array, prompt_len: jax.Array, rng,
@@ -264,7 +117,7 @@ class ReasoningEngine:
             )
             pos1d = jnp.concatenate([img_pos, jnp.where(pos1d >= 0, pos1d + n_img, -1)], 1)
         cache = alloc_cache(model.cfg, B, ecfg.capacity)
-        hidden, cache = self._prefill_fn(
+        hidden, cache = self.executor.prefill(
             self.params, prompts, self._positions(pos1d), pos1d, cache,
             frames=frames, image_embeds=image_embeds,
         )
@@ -295,15 +148,16 @@ class ReasoningEngine:
         """Run the reasoning loop until all sequences exit (EAT stop, natural
         </think>, or token budget).  Device-resident: each iteration is one
         jitted ``decode_chunk`` dispatch advancing up to ``chunk_len``
-        tokens; the only host sync is the per-chunk ``active.any()``."""
+        tokens; the only host sync is the per-chunk ``active.any()``.
+        CONSUMES ``state`` (the chunk program donates its buffers)."""
         budget = jnp.asarray(max_tokens or self.ecfg.max_reasoning_tokens,
                              jnp.int32)
         # chunk_len <= 0 would make the device loop a no-op and spin the
         # host loop forever
         chunk = jnp.asarray(max(1, chunk_len or self.ecfg.chunk_len), jnp.int32)
-        fn = self._chunk_mon if use_monitor else self._chunk_plain
         while True:
-            state = fn(self.params, state, budget, chunk)
+            state = self.executor.decode_chunk(self.params, state, budget,
+                                               chunk, use_monitor=use_monitor)
             if not bool(state.active.any()):
                 break
         return state
@@ -317,11 +171,12 @@ class ReasoningEngine:
         ecfg = self.ecfg
         budget = max_tokens or ecfg.max_reasoning_tokens
         while bool(state.active.any()) and int(state.n_reasoning.max()) < budget:
-            state = self._decode_fn(self.params, state)
+            state = self.executor.decode_step(self.params, state)
             if use_monitor:
                 due = self.monitor.due(state.monitor, state.last_token)
                 if bool((due & state.active).any()):
-                    eat = self._probe_fn(self.params, state.cache, state.next_pos)
+                    eat = self.executor.probe(self.params, state.cache,
+                                              state.next_pos)
                     mon = self.monitor.update(state.monitor, eat, due, state.active)
                     state = state._replace(monitor=mon)
                 else:
@@ -339,60 +194,71 @@ class ReasoningEngine:
     def _admit(self, state: ServeState, one: ServeState, slot: int) -> ServeState:
         """Recycle batch ``slot`` with the single-sequence state ``one``
         (one jitted dispatch; ``slot`` is a traced scalar, so admissions
-        into different slots share the compilation)."""
-        return self._admit_fn(state, one, jnp.asarray(slot, jnp.int32))
+        into different slots share the compilation).  CONSUMES ``state``."""
+        return self.executor.admit(state, one, slot)
 
     def serve(self, prompts, prompt_len, rng, *, batch_size: int,
               max_tokens: int | None = None, use_monitor: bool = True,
-              chunk_len: int | None = None, answer_len: int = 0) -> list[dict]:
+              chunk_len: int | None = None, answer_len: int = 0,
+              record_trace: bool = False) -> list[dict]:
         """Continuous-batching serving loop over N requests with
         ``batch_size`` slots.
 
-        prompts: (N, S) LEFT-padded; prompt_len: (N,).  Sequences that exit
-        early free their slot mid-flight: the result is harvested, the next
-        queued prompt is prefilled (B=1) and merged into the slot, and the
-        chunked decode resumes with the batch still full.  Returns one dict
-        per request (in request order): ``reasoning_tokens``,
-        ``n_reasoning``, ``ended_think``, and — when ``answer_len`` > 0 —
-        the greedy forced-answer ``answer_tokens`` produced from the
-        sequence's cache before its slot was recycled.
+        prompts: (N, S) LEFT-padded; prompt_len: (N,).  Each request runs
+        the QUEUED -> PREFILLING -> DECODING -> EXITED/EXHAUSTED lifecycle
+        (``serving.request``); the FIFO slot policy lives in
+        ``serving.scheduler``; all device work is executor programs.
+        Sequences that exit early free their slot mid-flight: the result is
+        harvested, the next queued prompt is prefilled (B=1) and merged into
+        the slot, and the chunked decode resumes with the batch still full.
+
+        Returns one dict per request (in request order): the pre-refactor
+        keys (``reasoning_tokens``, ``n_reasoning``, ``ended_think``, and —
+        when ``answer_len`` > 0 — the greedy forced-answer
+        ``answer_tokens``) plus the request metadata: ``exit_reason``
+        (``eat`` / ``end_think`` / ``budget``), terminal ``status``, and —
+        with ``record_trace`` — the chunk-boundary ``eat_trace``
+        (n_reasoning, n_evals, ema_var) snapshots.
         """
-        prompts = jnp.asarray(prompts)
-        prompt_len = jnp.asarray(prompt_len)
-        n_req = prompts.shape[0]
+        prompts_np = np.asarray(prompts)
+        plen_np = np.asarray(prompt_len)
+        n_req = prompts_np.shape[0]
         B = min(batch_size, n_req)
-        budget = jnp.asarray(max_tokens or self.ecfg.max_reasoning_tokens,
-                             jnp.int32)
+        budget = int(max_tokens or self.ecfg.max_reasoning_tokens)
+        budget_dev = jnp.asarray(budget, jnp.int32)
         chunk = jnp.asarray(max(1, chunk_len or self.ecfg.chunk_len), jnp.int32)
-        fn = self._chunk_mon if use_monitor else self._chunk_plain
 
-        queue = deque(range(B, n_req))
+        requests = [
+            Request(rid=i, prompt=prompts_np[i], prompt_len=int(plen_np[i]))
+            for i in range(n_req)
+        ]
+        sched = SlotScheduler(requests, B, capacity=self.ecfg.capacity,
+                              budget=budget)
+
+        cohort = sched.start_batch()
         rng, sub = jax.random.split(rng)
-        state = self.start(prompts[:B], prompt_len[:B], sub)
-        slot_req: list[int | None] = list(range(B))
-        results: list[Optional[dict]] = [None] * n_req
+        state = self.start(jnp.asarray(prompts_np[:B]),
+                           jnp.asarray(plen_np[:B]), sub)
+        for req in cohort:
+            req.begin_decode()
+        sched.check_capacity(int(state.cache["cur"]), "the initial batch")
 
-        def _check_capacity(when: str):
-            # cur advances one shared slot per batch-wide decode step and
-            # never rewinds; a wrap would silently overwrite live KV rows
-            used = int(state.cache["cur"])
-            if used + int(budget) > self.ecfg.capacity:
-                raise RuntimeError(
-                    f"EngineConfig.capacity={self.ecfg.capacity} cannot hold "
-                    f"{when}: {used} slots committed + up to {int(budget)} "
-                    f"decode steps would wrap the cache ring. Size capacity "
-                    f"to the batch-lifetime token count "
-                    f"(~prompt_width + ceil(n_requests / batch_size) * budget)."
-                )
-
-        _check_capacity("the initial batch")
-
-        while any(r is not None for r in slot_req):
+        while sched.running:
             if bool(state.active.any()):
-                state = fn(self.params, state, budget, chunk)
+                state = self.executor.decode_chunk(
+                    self.params, state, budget_dev, chunk,
+                    use_monitor=use_monitor,
+                )
             active_np = np.asarray(state.active)
-            done = [s for s, r in enumerate(slot_req)
-                    if r is not None and not active_np[s]]
+            if record_trace:
+                n_np = np.asarray(state.n_reasoning)
+                ev_np = np.asarray(state.monitor.n_evals)
+                var_np = np.asarray(
+                    self.monitor.stopper.debiased_var(state.monitor.stop_state)
+                )
+                for s, req in sched.bound():
+                    req.record_trace(n_np[s], ev_np[s], var_np[s])
+            done = sched.finished_slots(active_np)
             if not done:
                 continue
             # harvest results (answers roll out from the still-intact cache
@@ -405,28 +271,31 @@ class ReasoningEngine:
             out_len = np.asarray(state.out_len)
             n_reasoning = np.asarray(state.n_reasoning)
             ended = np.asarray(state.ended_think)
-            for s in done:
-                r = slot_req[s]
-                rec = {
-                    "request": r,
-                    "reasoning_tokens": out_tokens[s, :out_len[s]].copy(),
-                    "n_reasoning": int(n_reasoning[s]),
-                    "ended_think": bool(ended[s]),
-                }
-                if ans is not None:
-                    rec["answer_tokens"] = ans[s].copy()
-                results[r] = rec
-                slot_req[s] = None
-            for s in done:
-                if not queue:
+            eat_stop = np.asarray(state.monitor.stop_flag)
+            for s, req in done:
+                sched.release(s)
+                req.finish(
+                    reasoning_tokens=out_tokens[s, :out_len[s]].copy(),
+                    n_reasoning=int(n_reasoning[s]),
+                    ended_think=bool(ended[s]),
+                    eat_stop=bool(eat_stop[s]),
+                    answer_tokens=ans[s].copy() if ans is not None else None,
+                )
+            for s, _ in done:
+                if sched.pending == 0:
                     continue
-                _check_capacity("another admission")
-                r = queue.popleft()
+                # refuse BEFORE popping the queue: a capacity failure must
+                # leave the scheduler consistent (no stranded PREFILLING
+                # request holding a slot)
+                sched.check_capacity(int(state.cache["cur"]),
+                                     "another admission")
+                nxt = sched.admit_next(s)
                 rng, sub = jax.random.split(rng)
-                one = self.start(prompts[r:r + 1], prompt_len[r:r + 1], sub)
+                one = self.start(jnp.asarray(nxt.prompt[None]),
+                                 jnp.asarray([nxt.prompt_len]), sub)
                 state = self._admit(state, one, s)
-                slot_req[s] = r
-        return results
+                nxt.begin_decode()
+        return [r.to_result() for r in requests]
 
     # ------------------------------------------------------------- answers
     def force_answer(self, state: ServeState, n_tokens: int, rng=None,
@@ -434,7 +303,7 @@ class ReasoningEngine:
         """GenTillEoS(Q, <think>, R, </think>; theta) — Eq. (10)/Alg. 1 line 11.
         Returns (tokens (B,n), logprobs (B,n))."""
         rng = rng if rng is not None else state.rng
-        return self._rollout_fn(
+        return self.executor.rollout(
             self.params, state.cache, state.next_pos, state.last_token, rng,
             n=n_tokens, greedy=greedy,
         )
@@ -443,13 +312,13 @@ class ReasoningEngine:
         """K independent forced rollouts (for Pass@1 / #UA@K).  Returns
         tokens (K, B, n)."""
         rngs = jax.random.split(rng, k)
-        outs = [self._rollout_fn(self.params, state.cache, state.next_pos,
-                                 state.last_token, r, n=n_tokens)[0]
+        outs = [self.executor.rollout(self.params, state.cache, state.next_pos,
+                                      state.last_token, r, n=n_tokens)[0]
                 for r in rngs]
         return jnp.stack(outs)
 
     def eval_eat_now(self, state: ServeState) -> jax.Array:
-        return self._probe_fn(self.params, state.cache, state.next_pos)
+        return self.executor.probe(self.params, state.cache, state.next_pos)
 
     # ------------------------------------------------------------- tracing
     def reason_with_trace(
@@ -472,8 +341,11 @@ class ReasoningEngine:
                             jnp.int32)
         budget = jnp.asarray(max_tokens, jnp.int32)
         while bool(state.active.any()):
-            prev_n = state.n_reasoning
-            state = self._chunk_plain(self.params, state, budget, chunk)
+            # host copy BEFORE the chunk: the chunk donates ``state``, so a
+            # live reference to its n_reasoning buffer would be invalidated
+            prev_n = np.asarray(state.n_reasoning)
+            state = self.executor.decode_chunk(self.params, state, budget,
+                                               chunk, use_monitor=False)
             if newline_sched:
                 due = state.last_token == self.monitor.newline_id
             else:

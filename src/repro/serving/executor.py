@@ -1,0 +1,526 @@
+"""Executor layer: every jitted device program of the serving stack.
+
+This is the bottom of the three-layer serving architecture
+(``request.py`` -> ``scheduler.py`` -> ``executor.py``):
+
+  * ``request``   — per-request lifecycle state machine (host metadata),
+  * ``scheduler`` — slot allocation + admission policy (pure host Python),
+  * ``executor``  — the device programs those layers drive.
+
+The executor owns the canonical single-token EAT step (``make_eat_step`` —
+moved here from ``launch.serve_step`` so exactly one serve-step definition
+exists in the tree) and builds every program the engine dispatches:
+
+  prefill        prompt -> cache fill            (cache arg DONATED)
+  decode_chunk   lax.while_loop of EAT steps     (ServeState DONATED)
+  decode_step    one unmonitored step            (per-token baseline, no
+                                                  donation: benchmarks call
+                                                  it repeatedly on one state)
+  probe          non-committing EAT evaluation   (never donated — the cache
+                                                  must survive the probe)
+  admit          slot recycling row-merge        (resident state DONATED)
+  rollout        forced answer generation        (NOT donated: callers keep
+                                                  decoding from / re-rolling
+                                                  the same live cache)
+
+Programs are built once per ``(batch, variant)`` and cached.  With a mesh
+in ``model.ctx`` (threaded from ``launch.mesh``) every program is jitted
+with explicit ``in_shardings``/``out_shardings`` derived from
+``sharding.partition.serve_state_pspecs`` / ``serving.cache.cache_pspecs``
+/ ``param_pspecs`` — batch rows ride the data axis, heads/ffn ride the
+model axis — so ``reason()``/``serve()`` run data- + tensor-parallel with
+no host-side resharding between dispatches.  ``launch.dryrun`` lowers
+``build_serve_step_program`` from this module, so the program the roofline
+analyses cost out is the program the engine dispatches.
+
+Donation contract: ``decode_chunk`` and ``admit`` consume the ServeState
+they are passed (the KV cache is updated in place instead of being
+re-allocated every chunk — ``input_output_alias`` in the compiled HLO,
+asserted by ``tests/test_executor.py``).  Callers must treat a state they
+hand to those programs as dead and continue from the returned state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.eat import ProbeSpec, eval_eat
+from repro.core.monitor import MonitorState, ReasoningMonitor
+from repro.core.stopping import EATStopper
+from repro.models.model import Model
+from repro.serving.cache import cache_pspecs, freeze_inactive_rows, merge_cache_row
+from repro.serving.sampler import SamplerConfig, logprob_of, sample
+from repro.sharding.partition import param_pspecs, serve_state_pspecs
+
+
+def mesh_ns(ctx, spec: P) -> NamedSharding:
+    """One PartitionSpec -> NamedSharding on the ctx mesh."""
+    return NamedSharding(ctx.mesh, spec)
+
+
+def mesh_shardings(ctx, spec_tree):
+    """PartitionSpec pytree -> NamedSharding pytree on the ctx mesh — the
+    single spec->sharding hop for every executor program (the Executor
+    methods and the dry-run's ``build_serve_step_program`` both route
+    through here, so the lowered and the dispatched programs cannot drift
+    in how specs become shardings)."""
+    return jax.tree_util.tree_map(lambda s: mesh_ns(ctx, s), spec_tree)
+
+
+def positions_for(cfg, pos1d):
+    """Model-facing positions from 1-D positions: mrope configs broadcast
+    to the 3-section layout, everyone else passes through.  THE single
+    definition — prefill (engine.start), the EAT step, and rollouts must
+    agree or cached and probed positions silently diverge."""
+    if cfg.mrope_sections:
+        return jnp.broadcast_to(pos1d[..., None], pos1d.shape + (3,))
+    return pos1d
+
+
+class ServeState(NamedTuple):
+    """Device-resident batched decode state (one row per slot)."""
+
+    cache: dict
+    rng: jax.Array
+    active: jax.Array          # (B,) still reasoning
+    next_pos: jax.Array        # (B,) next token position (left-pad aware)
+    last_token: jax.Array      # (B,)
+    n_reasoning: jax.Array     # (B,) reasoning tokens generated
+    monitor: MonitorState
+    ended_think: jax.Array     # (B,) emitted </think> naturally
+    out_tokens: jax.Array      # (B, T_buf) generated reasoning tokens
+    out_len: jax.Array         # (B,)
+
+
+# --------------------------------------------------------------------------
+# The canonical single-token EAT-monitored decode step — ONE program, every
+# driver: the engine's device-resident chunks scan it, the dry-runs lower it.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServeStepConfig:
+    window: int = 0
+    probe: ProbeSpec = ProbeSpec((1, 6))        # </think> + "final answer:" prefix
+    stopper: EATStopper = EATStopper(alpha=0.2, delta=1e-3)
+    sampler: SamplerConfig = SamplerConfig()
+    with_probe: bool = True
+    # §Perf: fuse the probe into the decode forward (one weight pass per
+    # step instead of two; see Model.decode_and_probe)
+    fused_probe: bool = False
+
+
+def serve_monitor(scfg: ServeStepConfig) -> ReasoningMonitor:
+    """The dry-run's evaluation schedule: probe every token, no warmup —
+    the most expensive (upper-bound) configuration of the monitored step."""
+    return ReasoningMonitor(stopper=scfg.stopper, probe=scfg.probe,
+                            schedule="every_n", every_n=1, min_evals=0)
+
+
+def make_eat_step(
+    model: Model,
+    monitor: ReasoningMonitor | None,
+    sampler: SamplerConfig,
+    *,
+    window: int | None = None,
+    probe_cond: bool = True,
+    fused_probe: bool = False,
+):
+    """Build ``step(params, cache, token, pos1d, mon, active, rng)``
+    -> ``(next_token, cache, mon, stop, rng)``.
+
+    token/pos1d: (B,1); mon: MonitorState; active: (B,) bool.  ``stop`` is
+    the latched per-sequence exit mask (``mon.stop_flag``).
+
+    ``probe_cond=True`` wraps the probe+update in ``lax.cond`` on
+    ``(due & active).any()`` so chunks where no sequence hits an evaluation
+    point pay zero probe FLOPs (the engine's sparse-schedule case);
+    ``probe_cond=False`` probes unconditionally (the dry-run's every-token
+    schedule, where the cond would always take the probe branch anyway).
+    """
+    cfg = model.cfg
+
+    def _positions(pos1d):
+        return positions_for(cfg, pos1d)
+
+    def step(params, cache, token, pos1d, mon: MonitorState, active, rng):
+        if monitor is not None and fused_probe:
+            B = token.shape[0]
+            m = len(monitor.probe)
+            probe_toks = jnp.broadcast_to(
+                jnp.asarray(monitor.probe.tokens, jnp.int32), (B, m)
+            )
+            pos_all = pos1d[:, :1] + jnp.arange(1 + m, dtype=jnp.int32)[None]
+            logits, eat, cache = model.decode_and_probe(
+                params, token, _positions(pos_all), pos_all, cache, probe_toks,
+                window=window,
+            )
+            rng, sub = jax.random.split(rng)
+            nxt = sample(sub, logits[:, -1], cfg.vocab, sampler)
+            mon = monitor.update(mon, eat, monitor.due(mon, nxt), active)
+            return nxt, cache, mon, mon.stop_flag, rng
+
+        logits, cache = model.decode_step(
+            params, token, _positions(pos1d), pos1d, cache, window=window
+        )
+        rng, sub = jax.random.split(rng)
+        nxt = sample(sub, logits[:, -1], cfg.vocab, sampler)
+        if monitor is None:
+            return nxt, cache, mon, jnp.zeros(nxt.shape, bool), rng
+
+        next_pos = pos1d[:, -1] + 1
+        eat_fn = lambda: eval_eat(model, params, cache, monitor.probe, next_pos)  # noqa: E731
+        mon = monitor.observe(mon, eat_fn, nxt, active, lazy=probe_cond)
+        return nxt, cache, mon, mon.stop_flag, rng
+
+    return step
+
+
+def build_serve_step_program(model: Model, scfg: ServeStepConfig,
+                             cache_struct, params_struct):
+    """The decode-shape dry-run program: ONE every-token EAT step, jitted
+    with explicit shardings and the cache donated — the exact program shape
+    ``launch.dryrun`` lowers and costs out.
+
+    Returns ``(jitted_fn, mon_struct)``; call as
+    ``jitted_fn(params, cache, token, pos1d, mon, rng)``.
+    """
+    ctx, cfg = model.ctx, model.cfg
+    monitor = serve_monitor(scfg) if scfg.with_probe else None
+    step = make_eat_step(
+        model, monitor, scfg.sampler, window=scfg.window,
+        probe_cond=False, fused_probe=scfg.fused_probe,
+    )
+
+    def serve_step(params, cache, token, pos1d, mon: MonitorState, rng):
+        """token/pos1d: (B,1).  Returns (next_token, cache, mon, stop, rng)."""
+        active = jnp.ones(token.shape[:1], bool)
+        return step(params, cache, token, pos1d, mon, active, rng)
+
+    B = cache_struct["pos"].shape[0]
+    mon_struct = jax.eval_shape(lambda: serve_monitor(scfg).init(B))
+    if ctx.mesh is None:
+        return jax.jit(serve_step, donate_argnums=1), mon_struct
+
+    b = ctx.batch_entry_for(B)
+    in_sh = (
+        mesh_shardings(ctx, param_pspecs(params_struct, cfg, ctx)),
+        mesh_shardings(ctx, cache_pspecs(cfg, ctx, cache_struct)),
+        mesh_ns(ctx, P(b, None)),
+        mesh_ns(ctx, P(b, None)),
+        jax.tree_util.tree_map(lambda _: mesh_ns(ctx, P(b)), mon_struct),
+        mesh_ns(ctx, P()),
+    )
+    return jax.jit(serve_step, in_shardings=in_sh, donate_argnums=1), mon_struct
+
+
+# --------------------------------------------------------------------------
+# Executor: the engine-facing program store
+# --------------------------------------------------------------------------
+
+class Executor:
+    """Builds and caches every jitted program ``ReasoningEngine`` dispatches.
+
+    One instance per ``(model, EngineConfig, monitor)``; programs are built
+    lazily per batch size (shardings depend on whether the batch divides the
+    data axis) and cached for the executor's lifetime.
+    """
+
+    def __init__(self, model: Model, params, ecfg, monitor: ReasoningMonitor):
+        self.model = model
+        self.ecfg = ecfg
+        self.monitor = monitor
+        self.ctx = model.ctx
+        self.cfg = model.cfg
+        self._programs: dict = {}
+        self._param_sh = None
+        if self.ctx.mesh is not None:
+            self._param_sh = self._sh(param_pspecs(params, self.cfg, self.ctx))
+        self._step_mon = make_eat_step(model, monitor, ecfg.sampler,
+                                       probe_cond=True)
+        self._step_plain = make_eat_step(model, None, ecfg.sampler)
+
+    # ---------------------------------------------------------- shardings
+    def _ns(self, spec: P):
+        return mesh_ns(self.ctx, spec)
+
+    def _sh(self, spec_tree):
+        return mesh_shardings(self.ctx, spec_tree)
+
+    def _batch_entry(self, B: int):
+        return self.ctx.batch_entry_for(B)
+
+    def _state_sh(self, state: ServeState):
+        return self._sh(serve_state_pspecs(self.cfg, self.ctx, state))
+
+    def shard_params(self, params):
+        """Place the parameter pytree on the mesh once, so per-dispatch
+        ``in_shardings`` never trigger a host->device re-transfer."""
+        if self.ctx.mesh is None:
+            return params
+        return jax.device_put(params, self._param_sh)
+
+    # ---------------------------------------------------------- programs
+    def _advance(self, params, state: ServeState, budget, step_fn) -> ServeState:
+        """One monitored decode step + engine bookkeeping, all masked."""
+        cfg, ecfg = self.cfg, self.ecfg
+        tok = state.last_token[:, None]
+        # inactive rows still ride through the batched step, but their
+        # KV write must be invisible: pos=-1 keeps the duplicate-position
+        # entry out of every later attention mask (q_pos >= kv_pos >= 0)
+        pos1d = jnp.where(state.active, state.next_pos, -1)[:, None]
+        nxt, cache, mon, stop, rng = step_fn(
+            params, state.cache, tok, pos1d, state.monitor,
+            state.active, state.rng,
+        )
+        if cfg.arch_type in ("ssm", "hybrid"):
+            cache = freeze_inactive_rows(cache, state.cache, state.active)
+        nxt = jnp.where(state.active, nxt, ecfg.pad_id)
+        ended = state.ended_think | (state.active & (nxt == ecfg.end_think_id))
+        out_tokens = state.out_tokens.at[
+            jnp.arange(nxt.shape[0]), state.out_len
+        ].set(nxt)
+        inc = state.active.astype(jnp.int32)
+        n_reasoning = state.n_reasoning + inc
+        over = n_reasoning >= budget
+        return ServeState(
+            cache=cache,
+            rng=rng,
+            active=state.active & ~stop & ~ended & ~over,
+            next_pos=state.next_pos + inc,
+            last_token=nxt,
+            n_reasoning=n_reasoning,
+            monitor=mon,
+            ended_think=ended,
+            out_tokens=out_tokens,
+            out_len=state.out_len + inc,
+        )
+
+    def _chunk_program(self, state: ServeState, use_monitor: bool,
+                       donate: bool = True):
+        # ``donate=False`` exists ONLY for the donation audit
+        # (tests/test_executor.py), which A/Bs the compiled memory stats of
+        # the same program with and without the in-place cache alias.
+        B = int(state.active.shape[0])
+        key = ("chunk", B, use_monitor, donate)
+        if key not in self._programs:
+            step_fn = self._step_mon if use_monitor else self._step_plain
+
+            def chunk(params, st: ServeState, budget, chunk_len):
+                def cond(carry):
+                    i, s = carry
+                    return (i < chunk_len) & s.active.any()
+
+                def body(carry):
+                    i, s = carry
+                    return i + 1, self._advance(params, s, budget, step_fn)
+
+                _, st = jax.lax.while_loop(
+                    cond, body, (jnp.zeros((), jnp.int32), st)
+                )
+                return st
+
+            dn = (1,) if donate else ()
+            if self.ctx.mesh is None:
+                jitted = jax.jit(chunk, donate_argnums=dn)
+            else:
+                ssh = self._state_sh(state)
+                jitted = jax.jit(
+                    chunk,
+                    in_shardings=(self._param_sh, ssh, self._ns(P()),
+                                  self._ns(P())),
+                    out_shardings=ssh,
+                    donate_argnums=dn,
+                )
+            self._programs[key] = jitted
+        return self._programs[key]
+
+    def decode_chunk(self, params, state: ServeState, budget, chunk_len,
+                     *, use_monitor: bool = True) -> ServeState:
+        """Advance up to ``chunk_len`` monitored tokens in ONE dispatch
+        (``lax.while_loop`` over the EAT step).  DONATES ``state``."""
+        return self._chunk_program(state, use_monitor)(
+            params, state, budget, chunk_len
+        )
+
+    def decode_step(self, params, state: ServeState) -> ServeState:
+        """One unmonitored decode step — ``_advance`` with no budget.  The
+        per-token baseline for ``benchmarks/engine_throughput.py`` and unit
+        tests (so the two paths can never diverge).  No donation: the
+        benchmarks re-time it against one fixed state."""
+        key = ("decode", int(state.active.shape[0]))
+        if key not in self._programs:
+            def fn(params, st: ServeState):
+                no_budget = jnp.asarray(jnp.iinfo(jnp.int32).max, jnp.int32)
+                return self._advance(params, st, no_budget, self._step_plain)
+
+            if self.ctx.mesh is None:
+                jitted = jax.jit(fn)
+            else:
+                ssh = self._state_sh(state)
+                jitted = jax.jit(fn, in_shardings=(self._param_sh, ssh),
+                                 out_shardings=ssh)
+            self._programs[key] = jitted
+        return self._programs[key](params, state)
+
+    def prefill(self, params, tokens, positions, pos1d, cache, *,
+                frames=None, image_embeds=None):
+        """Prompt prefill; returns (hidden, cache).  DONATES ``cache`` (the
+        engine always hands it a freshly allocated one)."""
+        B = int(tokens.shape[0])
+        key = ("prefill", B, frames is not None, image_embeds is not None)
+        if key not in self._programs:
+            model = self.model
+
+            if frames is not None:
+                def fn(params, tokens, positions, pos1d, cache, frames):
+                    return model.prefill(params, tokens, positions, pos1d,
+                                         cache, frames=frames)
+            elif image_embeds is not None:
+                def fn(params, tokens, positions, pos1d, cache, image_embeds):
+                    return model.prefill(params, tokens, positions, pos1d,
+                                         cache, image_embeds=image_embeds)
+            else:
+                def fn(params, tokens, positions, pos1d, cache):
+                    return model.prefill(params, tokens, positions, pos1d,
+                                         cache)
+
+            if self.ctx.mesh is None:
+                jitted = jax.jit(fn, donate_argnums=4)
+            else:
+                b = self._batch_entry(B)
+                pos_spec = (P(b, None, None) if self.cfg.mrope_sections
+                            else P(b, None))
+                in_sh = [
+                    self._param_sh,
+                    self._ns(P(b, None)),
+                    self._ns(pos_spec),
+                    self._ns(P(b, None)),
+                    self._sh(cache_pspecs(self.cfg, self.ctx, cache)),
+                ]
+                if frames is not None or image_embeds is not None:
+                    in_sh.append(self._ns(P(b, None, None)))
+                jitted = jax.jit(fn, in_shardings=tuple(in_sh),
+                                 donate_argnums=4)
+            self._programs[key] = jitted
+        extras = [x for x in (frames, image_embeds) if x is not None]
+        return self._programs[key](params, tokens, positions, pos1d, cache,
+                                   *extras)
+
+    def probe(self, params, cache, next_pos):
+        """Non-committing EAT probe over the live cache.  Never donated —
+        the whole point is that the cache survives the evaluation."""
+        key = ("probe", int(next_pos.shape[0]))
+        if key not in self._programs:
+            model, monitor = self.model, self.monitor
+
+            def fn(params, cache, next_pos):
+                return eval_eat(model, params, cache, monitor.probe, next_pos)
+
+            if self.ctx.mesh is None:
+                jitted = jax.jit(fn)
+            else:
+                b = self._batch_entry(int(next_pos.shape[0]))
+                jitted = jax.jit(fn, in_shardings=(
+                    self._param_sh,
+                    self._sh(cache_pspecs(self.cfg, self.ctx, cache)),
+                    self._ns(P(b)),
+                ))
+            self._programs[key] = jitted
+        return self._programs[key](params, cache, next_pos)
+
+    def admit(self, state: ServeState, one: ServeState, slot) -> ServeState:
+        """Recycle a batch slot: overwrite row ``slot`` of every per-
+        sequence array (and the cache row, see ``merge_cache_row``) with
+        the freshly-prefilled single-sequence state ``one``.  One fused
+        dispatch; ``slot`` is traced so admissions into different slots
+        share the compilation.  DONATES ``state`` (the resident batch)."""
+        key = ("admit", int(state.active.shape[0]))
+        if key not in self._programs:
+            def fn(state: ServeState, one: ServeState, slot) -> ServeState:
+                def put(big, small):
+                    return big.at[slot].set(small[0])
+
+                return ServeState(
+                    cache=merge_cache_row(state.cache, one.cache, slot),
+                    rng=state.rng,
+                    active=put(state.active, one.active),
+                    next_pos=put(state.next_pos, one.next_pos),
+                    last_token=put(state.last_token, one.last_token),
+                    n_reasoning=put(state.n_reasoning, one.n_reasoning),
+                    monitor=jax.tree_util.tree_map(put, state.monitor,
+                                                   one.monitor),
+                    ended_think=put(state.ended_think, one.ended_think),
+                    out_tokens=put(state.out_tokens, one.out_tokens),
+                    out_len=put(state.out_len, one.out_len),
+                )
+
+            if self.ctx.mesh is None:
+                jitted = jax.jit(fn, donate_argnums=0)
+            else:
+                ssh = self._state_sh(state)
+                jitted = jax.jit(
+                    fn,
+                    in_shardings=(ssh, self._state_sh(one), self._ns(P())),
+                    out_shardings=ssh,
+                    donate_argnums=0,
+                )
+            self._programs[key] = jitted
+        return self._programs[key](state, one, jnp.asarray(slot, jnp.int32))
+
+    def rollout(self, params, cache, next_pos, last_token, rng, *, n: int,
+                greedy: bool = False):
+        """Forced answer rollout: append </think> then generate n tokens.
+        Returns (tokens (B,n), logprobs (B,n)).  The cache is NOT donated:
+        rollouts are functional reads of a live cache the caller keeps
+        decoding from (``reason_with_trace``) or re-rolls K times
+        (``rollout_answers``) — donation here would corrupt the sequence."""
+        B = int(next_pos.shape[0])
+        key = ("rollout", B, n, greedy)
+        if key not in self._programs:
+            model, cfg, ecfg = self.model, self.cfg, self.ecfg
+
+            def positions(pos1d):
+                return positions_for(cfg, pos1d)
+
+            def fn(params, cache, next_pos, last_token, rng):
+                et = jnp.full((B, 1), ecfg.end_think_id, jnp.int32)
+                pos1d = next_pos[:, None]
+                logits, cache2 = model.decode_step(
+                    params, et, positions(pos1d), pos1d, cache
+                )
+                scfg = dataclasses.replace(ecfg.sampler, greedy=greedy)
+
+                def step(carry, _):
+                    cache_c, pos_c, logit_c, rng_c = carry
+                    rng_c, sub = jax.random.split(rng_c)
+                    tok = sample(sub, logit_c, cfg.vocab, scfg)
+                    lp = logprob_of(logit_c, tok, cfg.vocab)
+                    p1 = pos_c[:, None]
+                    lg, cache_c = model.decode_step(
+                        params, tok[:, None], positions(p1), p1, cache_c
+                    )
+                    return (cache_c, pos_c + 1, lg[:, -1], rng_c), (tok, lp)
+
+                (_, _, _, _), (toks, lps) = jax.lax.scan(
+                    step, (cache2, next_pos + 1, logits[:, -1], rng),
+                    None, length=n,
+                )
+                return jnp.moveaxis(toks, 0, 1), jnp.moveaxis(lps, 0, 1)
+
+            if self.ctx.mesh is None:
+                jitted = jax.jit(fn)
+            else:
+                b = self._batch_entry(B)
+                jitted = jax.jit(fn, in_shardings=(
+                    self._param_sh,
+                    self._sh(cache_pspecs(self.cfg, self.ctx, cache)),
+                    self._ns(P(b)),
+                    self._ns(P(b)),
+                    self._ns(P()),
+                ))
+            self._programs[key] = jitted
+        return self._programs[key](params, cache, next_pos, last_token, rng)

@@ -1,7 +1,12 @@
-"""Token sampling (temperature / top-p), jit-friendly, padded-vocab aware.
+"""Token sampling (temperature / top-k / top-p / min-p), jit-friendly,
+padded-vocab aware.
 
 The paper's decoding config (App. H): temperature 0.6, top-p 0.95 (the
 DeepSeek model-card recommendation); greedy for confidence rollouts.
+``top_k`` and ``min_p`` are serving-stack extras (both off by default):
+filters apply in the conventional order top-k -> top-p -> min-p, each
+masking logits to -inf so the final categorical renormalizes over the
+surviving set (``filter_logits`` exposes the masking math for unit tests).
 """
 from __future__ import annotations
 
@@ -15,6 +20,8 @@ import jax.numpy as jnp
 class SamplerConfig:
     temperature: float = 0.6
     top_p: float = 0.95
+    top_k: int = 0            # keep the k highest-prob tokens (0 = off)
+    min_p: float = 0.0        # drop tokens with p < min_p * max_p (0 = off)
     greedy: bool = False
 
 
@@ -23,6 +30,37 @@ def _mask_padded(logits: jax.Array, vocab: int) -> jax.Array:
     if vocab < Vp:
         logits = jnp.where(jnp.arange(Vp) < vocab, logits, -jnp.inf)
     return logits
+
+
+def filter_logits(
+    lf: jax.Array,            # (B, Vp) float32, temperature already applied
+    cfg: SamplerConfig,
+) -> jax.Array:
+    """Apply the top-k / top-p / min-p cutoffs as -inf masks.
+
+    Each filter keeps at least the argmax token: top-k by construction
+    (k >= 1 keeps the largest logit), top-p because the cutoff is the first
+    sorted prob reaching the mass (the max always qualifies), min-p because
+    ``max_p >= min_p * max_p`` for ``min_p <= 1``.
+    """
+    if cfg.top_k > 0 and cfg.top_k < lf.shape[-1]:
+        # kth-largest logit per row (ties at the threshold all survive);
+        # lax.top_k, not a full-vocab sort — this runs every decode step
+        kth = jax.lax.top_k(lf, cfg.top_k)[0][:, -1:]
+        lf = jnp.where(lf >= kth, lf, -jnp.inf)
+    if cfg.top_p < 1.0:
+        probs = jax.nn.softmax(lf, axis=-1)
+        srt = jnp.sort(probs, axis=-1)[:, ::-1]
+        cum = jnp.cumsum(srt, axis=-1)
+        # smallest set with cumulative mass >= top_p: keep probs >= cutoff
+        idx = jnp.sum(cum < cfg.top_p, axis=-1, keepdims=True)   # first idx reaching p
+        cutoff = jnp.take_along_axis(srt, idx, axis=-1)
+        lf = jnp.where(probs >= cutoff, lf, -jnp.inf)
+    if cfg.min_p > 0.0:
+        probs = jax.nn.softmax(lf, axis=-1)
+        cutoff = cfg.min_p * probs.max(axis=-1, keepdims=True)
+        lf = jnp.where(probs >= cutoff, lf, -jnp.inf)
+    return lf
 
 
 def sample(
@@ -35,14 +73,7 @@ def sample(
     if cfg.greedy:
         return jnp.argmax(lf, axis=-1).astype(jnp.int32)
     lf = lf / jnp.maximum(cfg.temperature, 1e-6)
-    if cfg.top_p < 1.0:
-        probs = jax.nn.softmax(lf, axis=-1)
-        srt = jnp.sort(probs, axis=-1)[:, ::-1]
-        cum = jnp.cumsum(srt, axis=-1)
-        # smallest set with cumulative mass >= top_p: keep probs >= cutoff
-        idx = jnp.sum(cum < cfg.top_p, axis=-1, keepdims=True)   # first idx reaching p
-        cutoff = jnp.take_along_axis(srt, idx, axis=-1)
-        lf = jnp.where(probs >= cutoff, lf, -jnp.inf)
+    lf = filter_logits(lf, cfg)
     return jax.random.categorical(rng, lf, axis=-1).astype(jnp.int32)
 
 

@@ -1,0 +1,120 @@
+"""Scheduler layer: slot allocation + admission policy for continuous
+batching.
+
+Middle of the three-layer serving stack (``request`` -> ``scheduler`` ->
+``executor``).  Pure host-side Python — deliberately NO jax import: every
+decision here is a list/deque operation over ``Request`` objects, so the
+policy can be unit-tested without touching a device and swapped (priority
+queues, per-tenant fairness, paged admission) without re-tracing any
+program.
+
+The policy is FIFO continuous batching: ``batch_size`` slots, a queue of
+QUEUED requests, and the invariant that a slot freed by an early-exiting
+sequence is refilled immediately (the executor's ``admit`` program merges
+the freshly prefilled row in).  The scheduler also owns the cache-ring
+capacity guard: ``cur`` advances one shared slot per batch-wide decode step
+and never rewinds, so a wrap would silently overwrite live KV rows — we
+refuse the admission instead.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from typing import Iterator, Optional
+
+from repro.serving.request import Request, RequestStatus
+
+
+class SlotScheduler:
+    """FIFO slot scheduler over a fixed-size continuous batch."""
+
+    def __init__(self, requests: list[Request], batch_size: int, *,
+                 capacity: int, budget: int):
+        if batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
+        self.requests = list(requests)
+        self.queue: deque[Request] = deque(
+            r for r in self.requests if r.status is RequestStatus.QUEUED
+        )
+        self.slots: list[Optional[Request]] = [None] * batch_size
+        self.capacity = capacity
+        self.budget = budget
+
+    # ----------------------------------------------------------- admission
+    def start_batch(self) -> list[Request]:
+        """Admit the initial cohort: fill every slot from the queue (fewer
+        requests than slots leaves the tail slots empty)."""
+        cohort = []
+        for slot in range(len(self.slots)):
+            if not self.queue:
+                break
+            req = self.queue.popleft()
+            req.admit(slot)
+            self.slots[slot] = req
+            cohort.append(req)
+        return cohort
+
+    def admit_next(self, slot: int) -> Optional[Request]:
+        """Recycle a freed ``slot`` with the next queued request (None when
+        the queue has drained).  The request comes back PREFILLING; the
+        serve loop flips it to DECODING once its row is merged in."""
+        if self.slots[slot] is not None:
+            raise RuntimeError(f"slot {slot} is still occupied by request "
+                               f"{self.slots[slot].rid}")
+        if not self.queue:
+            return None
+        req = self.queue.popleft()
+        req.admit(slot)
+        self.slots[slot] = req
+        return req
+
+    # ------------------------------------------------------------- harvest
+    def release(self, slot: int) -> Request:
+        req = self.slots[slot]
+        if req is None:
+            raise RuntimeError(f"slot {slot} is already free")
+        self.slots[slot] = None
+        return req
+
+    def finished_slots(self, active_mask) -> list[tuple[int, Request]]:
+        """Slots whose resident request stopped decoding this chunk:
+        ``active_mask`` is the host copy of ``ServeState.active``."""
+        return [(s, r) for s, r in enumerate(self.slots)
+                if r is not None and not bool(active_mask[s])]
+
+    def bound(self) -> Iterator[tuple[int, Request]]:
+        """(slot, request) pairs currently resident in the batch."""
+        return ((s, r) for s, r in enumerate(self.slots) if r is not None)
+
+    @property
+    def running(self) -> bool:
+        return any(r is not None for r in self.slots)
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    # ------------------------------------------------------ capacity guard
+    @staticmethod
+    def required_capacity(prompt_width: int, n_requests: int,
+                          batch_size: int, budget: int) -> int:
+        """Cache slots needed for a batch-lifetime run of the ring cache:
+        the shared ``cur`` pointer advances one slot per batch-wide decode
+        step and never rewinds, so capacity must cover the prompt width
+        plus every cohort's worst-case budget (one extra cohort of slack
+        for admissions that straddle cohort boundaries).  The single
+        sizing rule for every driver (CLI, benchmarks) of ``serve()``."""
+        cohorts = math.ceil(n_requests / batch_size) + 1
+        return prompt_width + cohorts * budget
+
+    def check_capacity(self, used: int, when: str) -> None:
+        """Refuse work that would wrap the shared cache ring.  ``used`` is
+        the committed ring length (``int(state.cache['cur'])``)."""
+        if used + self.budget > self.capacity:
+            raise RuntimeError(
+                f"EngineConfig.capacity={self.capacity} cannot hold "
+                f"{when}: {used} slots committed + up to {self.budget} "
+                f"decode steps would wrap the cache ring. Size capacity "
+                f"to the batch-lifetime token count "
+                f"(~prompt_width + ceil(n_requests / batch_size) * budget)."
+            )

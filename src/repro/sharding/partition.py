@@ -73,6 +73,13 @@ class ShardCtx:
     def batch_spec_entry(self):
         return self.batch_axes if len(self.batch_axes) > 1 else self.batch_axes[0]
 
+    def batch_entry_for(self, batch: int):
+        """PartitionSpec entry for a batch axis of size ``batch``: the data
+        axes when the size divides them, else None (replicated — e.g. B=1
+        slot-admission states, batch=1 long-context shapes).  THE single
+        divisibility rule for every batch-dim spec in the tree."""
+        return self.batch_spec_entry() if batch % self.data_size == 0 else None
+
     def wsc(self, x, spec: P):
         """with_sharding_constraint if a mesh is active, else identity."""
         if self.mesh is None:
@@ -193,3 +200,32 @@ def param_shardings(params, cfg: ModelConfig, ctx: ShardCtx):
         return None
     specs = param_pspecs(params, cfg, ctx)
     return jax.tree_util.tree_map(lambda s: NamedSharding(ctx.mesh, s), specs)
+
+
+def serve_state_pspecs(cfg: ModelConfig, ctx: ShardCtx, state):
+    """PartitionSpec pytree for a ``serving.executor.ServeState``.
+
+    The cache follows ``serving.cache.cache_pspecs`` (kv-heads / capacity /
+    SSD-heads on the model axis); every other field is a per-slot array with
+    a leading batch dim that rides the data axis (when divisible — B=1
+    admission states stay replicated); the rng key is replicated.  This is
+    the spec the executor feeds to ``jax.jit`` in/out shardings for its
+    decode-chunk / admit / per-token programs.
+    """
+    # lazy: serving.cache imports ShardCtx from this module
+    from repro.serving.cache import cache_pspecs
+
+    if ctx.mesh is None:
+        return jax.tree_util.tree_map(lambda _: P(), state)
+    b = ctx.batch_entry_for(state.active.shape[0])
+
+    def bspec(x):
+        if getattr(x, "ndim", 0) == 0:
+            return P()
+        return P(b, *([None] * (x.ndim - 1)))
+
+    specs = jax.tree_util.tree_map(bspec, state)
+    return specs._replace(
+        cache=cache_pspecs(cfg, ctx, state.cache),
+        rng=P(),
+    )

@@ -176,8 +176,9 @@ def test_inactive_ride_along_preserves_rollout():
                    jax.random.PRNGKey(3))
     st = st._replace(active=jnp.array([False, True]))   # row 0 exited
     before, _ = eng.force_answer(st, 6, greedy=True)
+    n0 = int(st.n_reasoning[0])         # reason() donates st's buffers
     st2 = eng.reason(st, max_tokens=16)                 # row 1 rides 15 steps
-    assert int(st2.n_reasoning[0]) == int(st.n_reasoning[0])
+    assert int(st2.n_reasoning[0]) == n0
     after, _ = eng.force_answer(st2, 6, greedy=True)
     np.testing.assert_array_equal(np.asarray(before)[0], np.asarray(after)[0])
 
@@ -203,6 +204,10 @@ def test_admit_preserves_resident_rows():
                    jax.random.PRNGKey(1))
     ref = eng.reason(st, max_tokens=16)   # row 1's undisturbed rollout
 
+    # reason() donated st's buffers — rebuild the identical state (greedy
+    # engine + same PRNGKey => bit-identical prefill) before admitting
+    st = eng.start(jnp.asarray(b["prompts"][:2]), jnp.asarray(b["prompt_len"][:2]),
+                   jax.random.PRNGKey(1))
     one = eng.start(jnp.asarray(b["prompts"][2:3]), jnp.asarray(b["prompt_len"][2:3]),
                     jax.random.PRNGKey(2))
     st2 = eng._admit(st, one, 0)          # replace row 0 mid-flight

@@ -1,0 +1,166 @@
+"""Executor-layer tests: buffer-donation audit (the KV cache must be
+updated in place, not re-allocated per chunk), serve-state partition specs,
+and the sharded program path on a 1x1 mesh (same math, mesh machinery on).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.eat import make_probe
+from repro.core.monitor import ReasoningMonitor
+from repro.core.stopping import EATStopper
+from repro.data.synthetic import ChainTask, Tokens
+from repro.models import Model
+from repro.serving.cache import cache_bytes
+from repro.serving.engine import EngineConfig, ReasoningEngine
+from repro.serving.sampler import SamplerConfig
+from repro.sharding.partition import ShardCtx, serve_state_pspecs
+from repro.utils.jax_compat import cost_analysis_dict, make_abstract_mesh
+
+
+def _engine(ctx=None, budget=24, capacity=96):
+    cfg = get_config("tiny")
+    model = Model(cfg, attn_impl="xla") if ctx is None else \
+        Model(cfg, ctx, attn_impl="xla")
+    params = model.init(jax.random.PRNGKey(11))
+    ecfg = EngineConfig(
+        max_reasoning_tokens=budget, capacity=capacity,
+        pad_id=Tokens.PAD, end_think_id=Tokens.END_THINK,
+        newline_id=Tokens.NEWLINE, eos_id=Tokens.EOS, chunk_len=8,
+        sampler=SamplerConfig(greedy=True),
+    )
+    monitor = ReasoningMonitor(
+        stopper=EATStopper(alpha=0.2, delta=1e9),
+        probe=make_probe(Tokens.END_THINK, (Tokens.ANS,)),
+        schedule="every_n", every_n=4, min_evals=1,
+    )
+    return ReasoningEngine(model, params, ecfg, monitor)
+
+
+@pytest.fixture(scope="module")
+def eng_and_state():
+    eng = _engine()
+    b = ChainTask().serve_batch(np.random.default_rng(0), 2)
+    st = eng.start(jnp.asarray(b["prompts"]), jnp.asarray(b["prompt_len"]),
+                   jax.random.PRNGKey(0))
+    return eng, st
+
+
+# ----------------------------------------------------------- donation audit
+def test_chunk_decode_donates_cache(eng_and_state):
+    """Chunked decode must alias the ServeState in instead of allocating a
+    second cache: peak bytes ~ 1x cache, not 2x (the satellite's
+    cost_analysis assertion, via jax_compat)."""
+    eng, st = eng_and_state
+    budget = jnp.asarray(24, jnp.int32)
+    chunk = jnp.asarray(8, jnp.int32)
+    args = (eng.params, st, budget, chunk)
+    donated = eng.executor._chunk_program(st, True).lower(*args).compile()
+    plain = eng.executor._chunk_program(st, True, donate=False) \
+        .lower(*args).compile()
+    cb = cache_bytes(st.cache)
+
+    mem_d, mem_p = donated.memory_analysis(), plain.memory_analysis()
+    # the whole cache (plus the rest of the state) is donated in place ...
+    assert mem_d.alias_size_in_bytes >= cb
+    assert mem_p.alias_size_in_bytes == 0
+    # ... which removes (at least) one full cache from the live set: peak =
+    # args + temps + outputs - aliased
+    def peak(m):
+        return (m.argument_size_in_bytes + m.temp_size_in_bytes
+                + m.output_size_in_bytes - m.alias_size_in_bytes)
+
+    assert peak(mem_p) - peak(mem_d) >= cb
+    # both variants are the same program, flops-wise
+    cost = cost_analysis_dict(donated)
+    assert cost.get("flops", 0) > 0
+    assert cost.get("flops", 0) == cost_analysis_dict(plain).get("flops", 0)
+
+
+def test_prefill_donates_cache(eng_and_state):
+    eng, st = eng_and_state
+    B = int(st.active.shape[0])
+    prog = eng.executor._programs[("prefill", B, False, False)]
+    from repro.serving.cache import alloc_cache
+
+    prompts = jnp.zeros((B, 8), jnp.int32)
+    pos1d = jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32), (B, 8))
+    cache = alloc_cache(eng.model.cfg, B, eng.ecfg.capacity)
+    compiled = prog.lower(eng.params, prompts, pos1d, pos1d, cache).compile()
+    assert compiled.memory_analysis().alias_size_in_bytes >= cache_bytes(cache)
+
+
+def test_rollout_does_not_donate_cache(eng_and_state):
+    """The audit's negative case: rollouts are functional reads of a live
+    cache the caller keeps using — donating it would corrupt the sequence,
+    so the executor must NOT alias it."""
+    eng, st = eng_and_state
+    toks, _ = eng.force_answer(st, 4, greedy=True)     # builds the program
+    B = int(st.active.shape[0])
+    prog = eng.executor._programs[("rollout", B, 4, True)]
+    compiled = prog.lower(eng.params, st.cache, st.next_pos, st.last_token,
+                          st.rng).compile()
+    assert compiled.memory_analysis().alias_size_in_bytes < cache_bytes(st.cache)
+    # and the probe stays non-committing (cache survives, same EAT twice)
+    e1, e2 = eng.eval_eat_now(st), eng.eval_eat_now(st)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), atol=1e-6)
+
+
+# ------------------------------------------------------- serve-state pspecs
+def test_serve_state_pspecs_layout(eng_and_state):
+    from jax.sharding import PartitionSpec as P
+
+    _, st = eng_and_state            # B=2: divides the 2-wide data axis
+    mesh = make_abstract_mesh((2, 2), ("data", "model"))
+    ctx = ShardCtx(mesh=mesh)
+    cfg = get_config("tiny")
+    specs = serve_state_pspecs(cfg, ctx, st)
+    assert specs.rng == P()
+    assert specs.active == P("data")
+    assert specs.out_tokens == P("data", None)
+    assert specs.monitor.stop_flag == P("data")
+    # tiny: n_kv_heads=2 divides model=2 -> kv heads on the model axis
+    assert specs.cache["layers"]["seg"]["k"] == P(None, "data", None, "model", None)
+    assert specs.cache["cur"] == P()
+
+
+def test_serve_state_pspecs_b1_replicated(eng_and_state):
+    from jax.sharding import PartitionSpec as P
+
+    eng, _ = eng_and_state
+    b = ChainTask().serve_batch(np.random.default_rng(1), 1)
+    one = eng.start(jnp.asarray(b["prompts"]), jnp.asarray(b["prompt_len"]),
+                    jax.random.PRNGKey(1))
+    mesh = make_abstract_mesh((4, 2), ("data", "model"))
+    specs = serve_state_pspecs(get_config("tiny"), ShardCtx(mesh=mesh), one)
+    # B=1 cannot ride a 4-wide data axis: batch dims replicated, model dims kept
+    assert specs.active == P(None)
+    assert specs.cache["layers"]["seg"]["k"] == P(None, None, None, "model", None)
+
+
+# ------------------------------------------------------------- 1x1 mesh path
+def test_mesh_1x1_matches_local_exactly():
+    """The sharded program path (explicit in/out shardings, donation, param
+    device_put) on a trivial 1x1 mesh must be bit-identical to mesh=None —
+    exercises every mesh branch of the executor inside tier-1."""
+    from repro.launch.mesh import make_device_ctx
+
+    task = ChainTask()
+    b = task.serve_batch(np.random.default_rng(3), 3)
+
+    ref_eng = _engine()
+    ref = ref_eng.serve(b["prompts"], b["prompt_len"], jax.random.PRNGKey(0),
+                        batch_size=2, max_tokens=24, answer_len=4)
+
+    mesh_eng = _engine(ctx=make_device_ctx(1, 1))
+    out = mesh_eng.serve(b["prompts"], b["prompt_len"], jax.random.PRNGKey(0),
+                         batch_size=2, max_tokens=24, answer_len=4)
+
+    for r, o in zip(ref, out):
+        assert r["n_reasoning"] == o["n_reasoning"]
+        assert r["exit_reason"] == o["exit_reason"]
+        np.testing.assert_array_equal(r["reasoning_tokens"],
+                                      o["reasoning_tokens"])
+        np.testing.assert_array_equal(r["answer_tokens"], o["answer_tokens"])

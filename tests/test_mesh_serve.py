@@ -1,0 +1,102 @@
+"""Mesh equivalence: ``serve()``/``reason()`` on a 4x2 (data x model) mesh
+of 8 simulated host devices must produce token-for-token identical outputs,
+exit steps, and EAT trajectories to single-device serving on the tiny
+config.  Real multi-shard semantics need >1 device, so the meat runs in a
+subprocess with 8 forced host devices (tests keep 1 device, like
+``test_sharded_attention``)."""
+import os
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import get_config
+from repro.core.eat import make_probe
+from repro.core.monitor import ReasoningMonitor
+from repro.core.stopping import EATStopper
+from repro.data.synthetic import ChainTask, Tokens
+from repro.launch.mesh import local_ctx, make_device_ctx
+from repro.models import Model
+from repro.serving.engine import EngineConfig, ReasoningEngine
+from repro.serving.sampler import SamplerConfig
+
+assert len(jax.devices()) == 8, jax.devices()
+
+def build(ctx, delta):
+    cfg = get_config("tiny")
+    model = Model(cfg, ctx, attn_impl="xla")
+    params = model.init(jax.random.PRNGKey(11))   # same key => same weights
+    ecfg = EngineConfig(
+        max_reasoning_tokens=24, capacity=256,
+        pad_id=Tokens.PAD, end_think_id=Tokens.END_THINK,
+        newline_id=Tokens.NEWLINE, eos_id=Tokens.EOS, chunk_len=8,
+        sampler=SamplerConfig(greedy=True),
+    )
+    monitor = ReasoningMonitor(
+        stopper=EATStopper(alpha=0.2, delta=delta),
+        probe=make_probe(Tokens.END_THINK, (Tokens.ANS,)),
+        schedule="every_n", every_n=4, min_evals=1,
+    )
+    return ReasoningEngine(model, params, ecfg, monitor)
+
+task = ChainTask()
+b = task.serve_batch(np.random.default_rng(7), 6)
+
+# ---- serve(): continuous batching, early exit at the first EAT eval
+for delta in (1e9, 0.0):      # exit-at-first-eval AND run-to-budget regimes
+    ref_eng = build(local_ctx(), delta)
+    ref = ref_eng.serve(b["prompts"], b["prompt_len"], jax.random.PRNGKey(0),
+                        batch_size=4, max_tokens=24, answer_len=4,
+                        record_trace=True)
+    mesh_eng = build(make_device_ctx(4, 2), delta)
+    out = mesh_eng.serve(b["prompts"], b["prompt_len"], jax.random.PRNGKey(0),
+                         batch_size=4, max_tokens=24, answer_len=4,
+                         record_trace=True)
+    for r, o in zip(ref, out):
+        assert r["n_reasoning"] == o["n_reasoning"], (delta, r, o)
+        assert r["exit_reason"] == o["exit_reason"], (delta, r, o)
+        assert r["ended_think"] == o["ended_think"], (delta, r, o)
+        np.testing.assert_array_equal(r["reasoning_tokens"],
+                                      o["reasoning_tokens"])
+        np.testing.assert_array_equal(r["answer_tokens"], o["answer_tokens"])
+        # EAT trajectory: same evaluation schedule, same EMA variance values
+        assert len(r["eat_trace"]) == len(o["eat_trace"]), (delta, r, o)
+        for (n1, e1, v1), (n2, e2, v2) in zip(r["eat_trace"], o["eat_trace"]):
+            assert (n1, e1) == (n2, e2)
+            np.testing.assert_allclose(v1, v2, atol=1e-5)
+    print(f"serve delta={delta} equivalent over {len(ref)} requests")
+
+# ---- reason(): one batch, monitored, compare exit latches + EAT values
+ref_eng = build(local_ctx(), 1e9)
+mesh_eng = build(make_device_ctx(4, 2), 1e9)
+st_r = ref_eng.start(jnp.asarray(b["prompts"][:4]),
+                     jnp.asarray(b["prompt_len"][:4]), jax.random.PRNGKey(2))
+st_m = mesh_eng.start(jnp.asarray(b["prompts"][:4]),
+                      jnp.asarray(b["prompt_len"][:4]), jax.random.PRNGKey(2))
+np.testing.assert_allclose(np.asarray(ref_eng.eval_eat_now(st_r)),
+                           np.asarray(mesh_eng.eval_eat_now(st_m)), atol=1e-5)
+st_r = ref_eng.reason(st_r)
+st_m = mesh_eng.reason(st_m)
+np.testing.assert_array_equal(np.asarray(st_r.out_tokens),
+                              np.asarray(st_m.out_tokens))
+np.testing.assert_array_equal(np.asarray(st_r.n_reasoning),
+                              np.asarray(st_m.n_reasoning))
+np.testing.assert_array_equal(np.asarray(st_r.monitor.stop_flag),
+                              np.asarray(st_m.monitor.stop_flag))
+np.testing.assert_array_equal(np.asarray(st_r.monitor.n_evals),
+                              np.asarray(st_m.monitor.n_evals))
+print("reason equivalent")
+print("done")
+"""
+
+
+def test_mesh_serve_equivalence_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "done" in r.stdout

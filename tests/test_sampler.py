@@ -1,0 +1,71 @@
+"""Masking math for the sampler's top-k / top-p / min-p filters."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.sampler import SamplerConfig, filter_logits, sample
+
+
+def _lf(rows):
+    return jnp.asarray(np.array(rows, np.float32))
+
+
+def test_top_k_keeps_exactly_k():
+    lf = _lf([[0.0, 3.0, 1.0, 2.0, -1.0]])
+    out = filter_logits(lf, SamplerConfig(top_k=2, top_p=1.0))
+    kept = np.isfinite(np.asarray(out))[0]
+    np.testing.assert_array_equal(kept, [False, True, False, True, False])
+    # surviving logits pass through unchanged
+    assert float(out[0, 1]) == 3.0 and float(out[0, 3]) == 2.0
+
+
+def test_top_k_off_and_oversized_are_noops():
+    lf = _lf([[0.0, 3.0, 1.0]])
+    for k in (0, 3, 10):
+        out = filter_logits(lf, SamplerConfig(top_k=k, top_p=1.0))
+        assert np.isfinite(np.asarray(out)).all()
+
+
+def test_top_k_is_per_row():
+    lf = _lf([[5.0, 1.0, 0.0], [0.0, 1.0, 5.0]])
+    out = np.asarray(filter_logits(lf, SamplerConfig(top_k=1, top_p=1.0)))
+    np.testing.assert_array_equal(np.isfinite(out),
+                                  [[True, False, False], [False, False, True]])
+
+
+def test_min_p_threshold_is_relative_to_max():
+    # probs ~ [0.665, 0.244, 0.090]; min_p=0.2 -> cutoff 0.133: drop last
+    lf = _lf([[2.0, 1.0, 0.0]])
+    out = np.asarray(filter_logits(lf, SamplerConfig(min_p=0.2, top_p=1.0)))
+    np.testing.assert_array_equal(np.isfinite(out)[0], [True, True, False])
+    # min_p <= p_min/p_max keeps everything
+    out = np.asarray(filter_logits(lf, SamplerConfig(min_p=0.05, top_p=1.0)))
+    assert np.isfinite(out).all()
+    # min_p ~ 1 keeps only the argmax
+    out = np.asarray(filter_logits(lf, SamplerConfig(min_p=0.99, top_p=1.0)))
+    np.testing.assert_array_equal(np.isfinite(out)[0], [True, False, False])
+
+
+def test_top_p_smallest_covering_set():
+    # probs ~ [0.665, 0.244, 0.090]: top_p=0.7 needs the first two
+    lf = _lf([[2.0, 1.0, 0.0]])
+    out = np.asarray(filter_logits(lf, SamplerConfig(top_p=0.7)))
+    np.testing.assert_array_equal(np.isfinite(out)[0], [True, True, False])
+
+
+def test_filters_compose_and_never_empty_the_row():
+    lf = _lf([[9.0, 0.1, 0.0, -0.2], [1.0, 1.0, 1.0, 1.0]])
+    cfg = SamplerConfig(top_k=2, top_p=0.5, min_p=0.9)
+    out = np.asarray(filter_logits(lf, cfg))
+    assert np.isfinite(out).any(axis=-1).all()
+    # row 0: the dominant token survives the stack of filters
+    assert np.isfinite(out[0, 0])
+
+
+def test_sample_respects_filters_and_padded_vocab():
+    # vocab=3 of Vp=5; top_k=1 -> sampling must be deterministic argmax
+    logits = _lf([[0.0, 4.0, 1.0, 99.0, 99.0]])
+    cfg = SamplerConfig(temperature=1.0, top_p=1.0, top_k=1)
+    toks = [int(sample(jax.random.PRNGKey(s), logits, 3, cfg)[0])
+            for s in range(8)]
+    assert toks == [1] * 8          # never a padded column, never a runner-up

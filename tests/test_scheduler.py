@@ -1,0 +1,112 @@
+"""Host-side serving layers: request lifecycle state machine + slot
+scheduler policy.  Pure Python — no model, no device."""
+import numpy as np
+import pytest
+
+from repro.serving.request import (
+    EXIT_BUDGET,
+    EXIT_EAT,
+    EXIT_END_THINK,
+    Request,
+    RequestStatus,
+)
+from repro.serving.scheduler import SlotScheduler
+
+
+def _reqs(n):
+    return [Request(rid=i, prompt=np.zeros(4, np.int32), prompt_len=4)
+            for i in range(n)]
+
+
+def test_request_lifecycle_and_exit_reasons():
+    r = _reqs(1)[0]
+    assert r.status is RequestStatus.QUEUED
+    r.admit(slot=2)
+    assert r.status is RequestStatus.PREFILLING and r.slot == 2
+    r.begin_decode()
+    assert r.status is RequestStatus.DECODING and not r.done
+    r.record_trace(5, 1, 0.25)
+    r.finish(reasoning_tokens=np.arange(3), n_reasoning=3, ended_think=False,
+             eat_stop=True)
+    assert r.status is RequestStatus.EXITED and r.done
+    assert r.exit_reason == EXIT_EAT
+    out = r.to_result()
+    assert out["exit_reason"] == EXIT_EAT and out["status"] == "exited"
+    assert out["eat_trace"] == [(5, 1, 0.25)]
+
+    # reason precedence: eat > end_think > budget; budget => EXHAUSTED
+    r2 = _reqs(1)[0]
+    r2.admit(0); r2.begin_decode()
+    r2.finish(reasoning_tokens=np.arange(2), n_reasoning=2, ended_think=True,
+              eat_stop=False)
+    assert r2.exit_reason == EXIT_END_THINK and r2.status is RequestStatus.EXITED
+
+    r3 = _reqs(1)[0]
+    r3.admit(0); r3.begin_decode()
+    r3.finish(reasoning_tokens=np.arange(2), n_reasoning=2, ended_think=False,
+              eat_stop=False)
+    assert r3.exit_reason == EXIT_BUDGET and r3.status is RequestStatus.EXHAUSTED
+
+
+def test_request_illegal_transitions_raise():
+    r = _reqs(1)[0]
+    with pytest.raises(RuntimeError, match="illegal transition"):
+        r.begin_decode()                      # never admitted
+    r.admit(0)
+    with pytest.raises(RuntimeError, match="illegal transition"):
+        r.admit(1)                            # double admission
+    with pytest.raises(RuntimeError, match="illegal transition"):
+        r.finish(reasoning_tokens=None, n_reasoning=0, ended_think=False,
+                 eat_stop=False)              # harvest before decoding
+    r.begin_decode()
+    with pytest.raises(RuntimeError, match="never finished"):
+        r.to_result()
+
+
+def test_scheduler_fifo_and_recycling():
+    reqs = _reqs(5)
+    sched = SlotScheduler(reqs, batch_size=2, capacity=1000, budget=10)
+    cohort = sched.start_batch()
+    assert [r.rid for r in cohort] == [0, 1]
+    assert sched.pending == 3 and sched.running
+    for r in cohort:
+        r.begin_decode()
+
+    # slot 1 finishes -> released -> refilled FIFO with request 2
+    done = sched.finished_slots(np.array([True, False]))
+    assert [(s, r.rid) for s, r in done] == [(1, 1)]
+    req = sched.release(1)
+    req.finish(reasoning_tokens=np.arange(1), n_reasoning=1,
+               ended_think=False, eat_stop=True)
+    nxt = sched.admit_next(1)
+    assert nxt.rid == 2 and nxt.slot == 1
+    assert nxt.status is RequestStatus.PREFILLING
+    assert sched.pending == 2
+
+    # draining: empty queue admits None; fully released scheduler stops
+    with pytest.raises(RuntimeError, match="still occupied"):
+        sched.admit_next(0)
+    sched.release(0)
+    sched.release(1)
+    assert sched.admit_next(0).rid == 3
+    assert sched.admit_next(1).rid == 4
+    sched.release(0)
+    sched.release(1)
+    assert sched.admit_next(0) is None
+    assert not sched.running
+
+
+def test_scheduler_short_queue_leaves_slots_empty():
+    reqs = _reqs(2)
+    sched = SlotScheduler(reqs, batch_size=4, capacity=1000, budget=10)
+    cohort = sched.start_batch()
+    assert len(cohort) == 2
+    assert [s for s, _ in sched.bound()] == [0, 1]
+    assert sched.pending == 0
+
+
+def test_scheduler_capacity_guard():
+    sched = SlotScheduler(_reqs(1), batch_size=1, capacity=48, budget=24)
+    sched.check_capacity(10, "the initial batch")        # 34 <= 48: fine
+    with pytest.raises(RuntimeError, match="capacity"):
+        sched.check_capacity(30, "another admission")    # 54 > 48: wrap

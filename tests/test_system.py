@@ -88,10 +88,11 @@ def test_full_eat_serving_pipeline():
 
 
 def test_dryrun_builder_single_device():
-    """The dry-run build path (specs, shardings off) works with mesh=None:
-    lower the serve_step abstractly on CPU."""
+    """The dry-run build path works with mesh=None: lower the EXECUTOR's
+    serve-step program (the one the engine's chunks scan) abstractly on
+    CPU."""
     from repro.launch.input_specs import decode_specs
-    from repro.launch.serve_step import ServeStepConfig, make_serve_step, serve_monitor
+    from repro.serving.executor import ServeStepConfig, build_serve_step_program
     from repro.configs.base import InputShape
     from repro.utils.jax_compat import cost_analysis_dict
 
@@ -99,11 +100,10 @@ def test_dryrun_builder_single_device():
     model = Model(cfg, attn_impl="xla")
     shape = InputShape("t", seq_len=32, global_batch=2, kind="decode")
     spec = decode_specs(cfg, shape)
-    scfg = ServeStepConfig()
-    step = make_serve_step(model, scfg)
     params_struct = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
-    mon = jax.eval_shape(lambda: serve_monitor(scfg).init(2))
-    lowered = jax.jit(step).lower(
+    jitted, mon = build_serve_step_program(model, ServeStepConfig(),
+                                           spec["cache"], params_struct)
+    lowered = jitted.lower(
         params_struct, spec["cache"], spec["token"], spec["pos1d"], mon, spec["rng"]
     )
     compiled = lowered.compile()
