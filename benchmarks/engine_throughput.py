@@ -1,5 +1,5 @@
 """Engine decode throughput: per-token host loop vs device-resident chunks,
-plus the data-parallel serve() scaling sweep.
+the data-parallel serve() scaling sweep, and the ring-vs-paged KV cache A/B.
 
 The per-token path dispatches one jitted step per token and syncs the host
 twice per iteration (``active.any()``, ``n_reasoning.max()``); the chunked
@@ -15,9 +15,20 @@ device count — the device count is fixed at process start) and emits
 one physical CPU the simulated sweep measures sharding/dispatch overhead,
 not real speedup; on real chips the same harness measures both.
 
+``--cache {ring,paged,both}`` runs the mixed-exit-length serving workload
+(temperature sampling — sequences exit via a naturally sampled </think> at
+geometrically distributed lengths, or at the budget) under a FIXED physical
+KV-slot budget.  The ring spends it as ``batch * capacity`` dense slots, so
+the batch-lifetime capacity rule caps how many requests one batch may
+legally serve; the paged cache spends the same slots as a shared page pool,
+reclaims an exiting request's pages mid-batch, and admits the whole queue.
+``both`` emits ``artifacts/BENCH_paged_cache.json`` (requests-served and
+tok/s per backend — docs/serving.md §Choosing a cache backend).
+
 Run:  PYTHONPATH=src python benchmarks/engine_throughput.py
       [--batch 8] [--budget 96] [--chunks 1 8 32] [--out artifacts/...json]
       [--scaling] [--devices-list 1 2 4 8]
+      [--cache both] [--requests 32] [--page-size 16]
 """
 import argparse
 import json
@@ -36,11 +47,21 @@ from repro.core.monitor import ReasoningMonitor
 from repro.core.stopping import EATStopper
 from repro.data.synthetic import ChainTask, Tokens
 from repro.models import Model
+from repro.serving.cache import CacheConfig, page_align
 from repro.serving.engine import EngineConfig, ReasoningEngine
 from repro.serving.sampler import SamplerConfig
 
 
-def build_engine(budget: int, ctx=None, capacity=None) -> ReasoningEngine:
+def write_json(path: str, rec: dict) -> None:
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+
+
+def build_engine(budget: int, ctx=None, capacity=None,
+                 cache: CacheConfig | None = None) -> ReasoningEngine:
     cfg = get_config("tiny")
     model = Model(cfg, attn_impl="xla") if ctx is None else \
         Model(cfg, ctx, attn_impl="xla")
@@ -51,6 +72,7 @@ def build_engine(budget: int, ctx=None, capacity=None) -> ReasoningEngine:
         pad_id=Tokens.PAD, end_think_id=Tokens.END_THINK,
         newline_id=Tokens.NEWLINE, eos_id=Tokens.EOS,
         sampler=SamplerConfig(temperature=1.0, top_p=0.95),
+        cache=cache or CacheConfig(),
     )
     # delta=0 -> the monitor runs (probe + EMA at every paragraph break)
     # but never fires, so both paths decode the full budget: equal work.
@@ -113,6 +135,84 @@ def run_serve_child(devices: int, batch_per_dev: int, budget: int,
             "tokens_per_s": tokens / sec}
 
 
+def run_cache_bench(args) -> dict:
+    """Ring vs paged serve() under ONE physical KV-slot budget.
+
+    Workload: ``--requests`` prompts through ``--batch`` slots, temperature
+    sampling (mixed exit lengths: natural </think> at geometric lengths or
+    the budget).  The physical budget is ``batch * C_ring`` dense slots
+    where ``C_ring = S + 2*budget`` — enough ring capacity for roughly one
+    recycled cohort.  The ring may only admit the queue prefix whose
+    batch-lifetime fits that capacity (``required_capacity``); the paged
+    backend spends the same slots as a shared pool and serves everything,
+    reusing exited requests' pages mid-batch.
+    """
+    from repro.serving.scheduler import SlotScheduler
+
+    task = ChainTask()
+    B, budget, ps = args.batch, args.budget, args.page_size
+    n_req = args.requests or 4 * B
+    batch = task.serve_batch(np.random.default_rng(0), n_req)
+    S = batch["prompts"].shape[1]
+    C_ring = page_align(S + 2 * budget, ps)
+    phys_slots = B * C_ring                           # THE memory budget
+
+    # ring: largest queue prefix whose batch lifetime fits C_ring
+    k_ring = n_req
+    while k_ring > 1 and SlotScheduler.required_capacity(
+            S, k_ring, B, budget) > C_ring:
+        k_ring -= 1
+    # paged: logical capacity covers the whole queue (int32 metadata —
+    # cheap); the PHYSICAL pool is the same phys_slots budget
+    C_log = page_align(SlotScheduler.required_capacity(S, n_req, B, budget),
+                       ps)
+    variants = {
+        "ring": dict(n=k_ring, capacity=C_ring, cache=CacheConfig()),
+        "paged": dict(n=n_req, capacity=C_log,
+                      cache=CacheConfig(kind="paged", page_size=ps,
+                                        num_pages=phys_slots // ps + 1)),
+    }
+
+    rec = {"workload": "mixed_exit_serve", "batch": B, "budget": budget,
+           "requests_queued": n_req, "physical_kv_slots": phys_slots,
+           "page_size": ps}
+    for kind in (("ring", "paged") if args.cache == "both" else (args.cache,)):
+        v = variants[kind]
+        engine = build_engine(budget, capacity=v["capacity"], cache=v["cache"])
+        times, tokens = [], 0
+        for rep in range(args.reps + 1):              # rep 0 = warmup
+            t0 = time.perf_counter()
+            # ONE key for every rep: temperature sampling means the exit
+            # lengths (and so the token count) depend on the key — a
+            # per-rep key would divide one rep's tokens by another rep's
+            # median seconds
+            results = engine.serve(
+                batch["prompts"][:v["n"]], batch["prompt_len"][:v["n"]],
+                jax.random.PRNGKey(100), batch_size=B,
+                max_tokens=budget,
+            )
+            if rep:
+                times.append(time.perf_counter() - t0)
+                tokens = int(sum(r["n_reasoning"] for r in results))
+        sec = float(np.median(times))
+        rec[kind] = {
+            "requests_served": v["n"], "capacity": v["capacity"],
+            "seconds": sec, "tokens": tokens, "tokens_per_s": tokens / sec,
+        }
+        print(f"{kind:>6s}: served {v['n']:3d}/{n_req} requests  "
+              f"{tokens:6d} tok  {tokens / sec:8.0f} tok/s", flush=True)
+
+    if args.cache == "both":
+        rec["paged_admits_more"] = (rec["paged"]["requests_served"]
+                                    > rec["ring"]["requests_served"])
+        path = args.out or os.path.join(
+            os.path.dirname(__file__), "..", "artifacts",
+            "BENCH_paged_cache.json")
+        write_json(path, rec)
+        print(f"wrote {os.path.normpath(path)}")
+    return rec
+
+
 def run_scaling_sweep(args) -> dict:
     """Fan the sweep out one subprocess per device count (the simulated
     device count is fixed at jax import) and collect
@@ -154,9 +254,7 @@ def run_scaling_sweep(args) -> dict:
     path = args.out or os.path.join(
         os.path.dirname(__file__), "..", "artifacts",
         "BENCH_serve_scaling.json")
-    os.makedirs(os.path.dirname(path), exist_ok=True)
-    with open(path, "w") as f:
-        json.dump(out, f, indent=2)
+    write_json(path, out)
     print(f"wrote {os.path.normpath(path)}")
     return out
 
@@ -172,6 +270,14 @@ def main():
                     help="run the data-parallel serve() scaling sweep over "
                          "--devices-list simulated host devices")
     ap.add_argument("--devices-list", type=int, nargs="+", default=[1, 2, 4, 8])
+    ap.add_argument("--cache", choices=["ring", "paged", "both"], default=None,
+                    help="run the ring-vs-paged KV cache serve() A/B on the "
+                         "mixed-exit workload ('both' writes "
+                         "artifacts/BENCH_paged_cache.json)")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="--cache workload queue length (0 = 4 * --batch)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="--cache paged backend page size (logical slots)")
     ap.add_argument("--serve-child", type=int, default=0,
                     help=argparse.SUPPRESS)   # internal: one sweep point
     args = ap.parse_args()
@@ -188,6 +294,8 @@ def main():
         return rec
     if args.scaling:
         return run_scaling_sweep(args)
+    if args.cache:
+        return run_cache_bench(args)
 
     engine = build_engine(args.budget)
     batch = ChainTask().serve_batch(np.random.default_rng(0), args.batch)
@@ -216,9 +324,7 @@ def main():
               f"{tps:8.0f} tok/s   {tps / base_tps:5.2f}x")
 
     if args.out:
-        os.makedirs(os.path.dirname(args.out), exist_ok=True)
-        with open(args.out, "w") as f:
-            json.dump(rec, f, indent=2)
+        write_json(args.out, rec)
     return rec
 
 

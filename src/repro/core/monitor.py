@@ -7,7 +7,7 @@ sequence, when an evaluation is *due*, feeds the stopper, and exposes the
 combined exit decision.  It is jit-compatible: all state is arrays, all
 decisions are masks — load-bearing now that the monitor transition runs
 inside the engine's device-resident ``decode_chunk`` (a ``lax.while_loop``
-body; see ``launch.serve_step.make_eat_step``), not a host loop.
+body; see ``repro.serving.executor.make_eat_step``), not a host loop.
 """
 from __future__ import annotations
 

@@ -51,6 +51,15 @@ def main():
     ap.add_argument("--requests", type=int, default=0,
                     help="serve N queued requests through --batch slots "
                          "with continuous batching (0 = single batch)")
+    ap.add_argument("--cache", choices=["ring", "paged"], default="ring",
+                    help="KV-cache backend for --requests serving: ring "
+                         "(dense, batch-lifetime capacity) or paged (block "
+                         "pool, per-block admission — docs/serving.md)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged backend: logical slots per physical page")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="paged backend: physical page-pool size "
+                         "(0 = ring-equivalent auto sizing)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -88,14 +97,19 @@ def main():
     if args.requests:
         # continuous batching: args.batch slots over a longer request queue;
         # early-exiting sequences free their slot for the next prompt.  The
-        # shared ring pointer advances for the whole run, so capacity must
-        # cover the batch-lifetime worst case, not one budget.
+        # shared ring pointer advances for the whole run, so (logical)
+        # capacity must cover the batch-lifetime worst case, not one
+        # budget; with --cache paged that capacity is int32 metadata and
+        # the PHYSICAL footprint is --num-pages pages of live KV.
+        from repro.serving.cache import CacheConfig
         from repro.serving.scheduler import SlotScheduler
 
         batch = task.serve_batch(np.random.default_rng(0), args.requests)
         ecfg.capacity = SlotScheduler.required_capacity(
             batch["prompts"].shape[1], args.requests, args.batch, args.budget
         )
+        ecfg.cache = CacheConfig(kind=args.cache, page_size=args.page_size,
+                                 num_pages=args.num_pages)
         results = engine.serve(batch["prompts"], batch["prompt_len"],
                                jax.random.PRNGKey(0), batch_size=args.batch,
                                answer_len=4)

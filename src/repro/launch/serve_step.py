@@ -1,10 +1,15 @@
-"""Compat shim — the serve-step programs live in ``repro.serving.executor``.
+"""DEPRECATED compat shim — import from ``repro.serving.executor`` instead.
+
+The serve-step programs live in ``repro.serving.executor``; this module
+re-exports them for out-of-tree callers of the pre-refactor API and will be
+removed once none remain.  No in-tree code imports it (grep before adding a
+new importer — add it to ``repro.serving.executor`` instead).
 
 The canonical single-token EAT step (``make_eat_step``) and the dry-run's
 lowerable program (``build_serve_step_program``) moved into the executor
 layer so exactly ONE serve-step definition exists in the tree: the program
 the decode-shape dry-runs lower and cost out is the program the engine's
-device-resident chunks dispatch.
+device-resident chunks dispatch (docs/architecture.md).
 
 Note this is a partial shim: the old ``make_serve_step`` (bare step
 function, no jit/shardings) was deliberately REMOVED, not re-exported —

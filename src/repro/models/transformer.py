@@ -45,6 +45,42 @@ def write_slots(cur, m: int, capacity: int):
     return (cur + jnp.arange(m, dtype=jnp.int32)) % capacity
 
 
+# ------------------------------------------------------------ paged KV cache
+#
+# The block-paged cache (docs/architecture.md §Paged KV cache) keeps the
+# ring cache's LOGICAL addressing — the same ``slots`` / ``pos`` / ``cur``
+# convention above — but stores K/V in a pool of fixed-size physical pages:
+# pool (num_pages, page_size, ...tail) plus a per-row page table (B, NB)
+# mapping logical block ``slot // page_size`` -> physical page.  Entry 0 of
+# the pool is a reserved trash page: unmapped blocks read and write it, and
+# every read from it is position-masked (pos=-1 slots contribute exactly
+# 0.0 in all attention impls), so the gathered logical view is
+# element-for-element identical to the ring buffer wherever it matters.
+
+
+def gather_pages(pool: jax.Array, table: jax.Array) -> jax.Array:
+    """Physical pages -> the logical ring view.
+
+    pool: (P, ps, ...tail); table: (B, NB) int32.
+    Returns (B, NB*ps, ...tail) — the per-row logical cache the attention
+    mask addresses by ``kv_pos`` exactly as it addresses the ring buffer.
+    """
+    B, NB = table.shape
+    g = pool[table]                                   # (B, NB, ps, ...tail)
+    return g.reshape((B, NB * pool.shape[1]) + pool.shape[2:])
+
+
+def scatter_pages(pool: jax.Array, table: jax.Array, slots: jax.Array,
+                  new: jax.Array) -> jax.Array:
+    """Write ``new`` (B, m, ...tail) at logical ``slots`` (m,) through the
+    page table.  Rows whose block is unmapped (table entry 0) land in the
+    trash page — a don't-care, since their ``pos`` stays -1/masked."""
+    ps = pool.shape[1]
+    pages = table[:, slots // ps]                     # (B, m)
+    offs = jnp.broadcast_to((slots % ps)[None, :], pages.shape)
+    return pool.at[pages, offs].set(new.astype(pool.dtype))
+
+
 # ===================================================================== init
 
 
@@ -196,11 +232,16 @@ def attn_block_cached(
     entry: dict, kv_pos, slots, *,
     use_moe: bool, window: int = 0, attn_impl: str = "auto",
     cross_cache: tuple | None = None, enc_pos=None, x_extra=None,
+    paged: tuple | None = None,
 ):
     """Cached block (prefill m=S / decode m small).  Returns (x, entry, aux).
 
     ``entry`` holds this layer's cache arrays; new K/V are scattered into
-    ``slots`` (B-shared (m,) int32) before the attention read.
+    ``slots`` (B-shared (m,) int32) before the attention read.  With
+    ``paged=(page_table, page_size)`` the entry arrays are page POOLS
+    ((P, ps, ...) instead of (B, C, ...)): new K/V scatter through the page
+    table and the attention reads the gathered logical view — same mask,
+    same ``kv_pos``, bit-identical output (docs/architecture.md).
     """
     h_in = x if x_extra is None else jnp.concatenate([x, x_extra], axis=-1)
     h = rmsnorm(h_in, p["norm1"], cfg.norm_eps, cfg.rmsnorm_one_plus)
@@ -208,28 +249,44 @@ def attn_block_cached(
         q_nope, q_rope = att.mla_q(p["attn"], h, positions, cfg)
         c_new, kr_new = att.mla_latent(p["attn"], h, positions, cfg)
         entry = dict(entry)
-        entry["c"] = entry["c"].at[:, slots].set(c_new.astype(entry["c"].dtype))
-        entry["kr"] = entry["kr"].at[:, slots].set(kr_new.astype(entry["kr"].dtype))
+        if paged is not None:
+            table, _ps = paged
+            entry["c"] = scatter_pages(entry["c"], table, slots, c_new)
+            entry["kr"] = scatter_pages(entry["kr"], table, slots, kr_new)
+            cache_c = gather_pages(entry["c"], table)
+            cache_kr = gather_pages(entry["kr"], table)
+        else:
+            entry["c"] = entry["c"].at[:, slots].set(c_new.astype(entry["c"].dtype))
+            entry["kr"] = entry["kr"].at[:, slots].set(kr_new.astype(entry["kr"].dtype))
+            cache_c, cache_kr = entry["c"], entry["kr"]
         y = att.mla_absorbed_attend(
-            p["attn"], q_nope, q_rope, pos1d, cfg, entry["c"], entry["kr"], kv_pos,
+            p["attn"], q_nope, q_rope, pos1d, cfg, cache_c, cache_kr, kv_pos,
             window=window, attn_impl=attn_impl, ctx=ctx,
         )
     else:
         q, k_new, v_new = att.gqa_qkv(p["attn"], h, positions, cfg)
         q = _heads_constraint(q, cfg, ctx)
         entry = dict(entry)
-        entry["k"] = entry["k"].at[:, slots].set(k_new.astype(entry["k"].dtype))
-        entry["v"] = entry["v"].at[:, slots].set(v_new.astype(entry["v"].dtype))
+        if paged is not None:
+            table, _ps = paged
+            entry["k"] = scatter_pages(entry["k"], table, slots, k_new)
+            entry["v"] = scatter_pages(entry["v"], table, slots, v_new)
+            k_view = gather_pages(entry["k"], table)
+            v_view = gather_pages(entry["v"], table)
+        else:
+            entry["k"] = entry["k"].at[:, slots].set(k_new.astype(entry["k"].dtype))
+            entry["v"] = entry["v"].at[:, slots].set(v_new.astype(entry["v"].dtype))
+            k_view, v_view = entry["k"], entry["v"]
         if att.use_seq_sharded_cache(cfg, ctx, x.shape[1]):
             # §Perf P1': partial-softmax decode over the seq-sharded cache
             # (avoids GSPMD all-gathering the cache every attention read)
             o = att.seq_sharded_decode_attention(
-                q, entry["k"], entry["v"], pos1d, kv_pos, ctx,
+                q, k_view, v_view, pos1d, kv_pos, ctx,
                 window=window, scale=att.attn_scale(cfg),
             )
         else:
             o = att.attention(
-                q, entry["k"], entry["v"], pos1d, kv_pos, causal=True, window=window,
+                q, k_view, v_view, pos1d, kv_pos, causal=True, window=window,
                 scale=att.attn_scale(cfg), impl=attn_impl,
             )
         y = att.gqa_out(p["attn"], o)
@@ -417,6 +474,12 @@ def forward_cached(
     aux_total = jnp.zeros((), jnp.float32)
     x = _res_constraint(x, ctx, False)
     layers = cache.get("layers", {})
+    # block-paged cache: thread (page_table, page_size) into the attention
+    # blocks — logical addressing (slots/pos/cur) is unchanged
+    paged = None
+    if "page_table" in cache:
+        table = cache["page_table"]
+        paged = (table, cache["pos"].shape[1] // table.shape[1])
 
     if cfg.arch_type in ("dense", "vlm", "moe", "encdec"):
         segs = []
@@ -441,7 +504,7 @@ def forward_cached(
                 xx, entry_new, a = attn_block_cached(
                     p_layer, xx, positions, pos1d, cfg, ctx, entry, kv_pos, slots,
                     use_moe=use_moe, window=window, attn_impl=attn_impl,
-                    cross_cache=cc, enc_pos=cache.get("enc_pos"),
+                    cross_cache=cc, enc_pos=cache.get("enc_pos"), paged=paged,
                 )
                 if cross:  # cross kv is static; don't re-emit to save copies
                     entry_new["ck"], entry_new["cv"] = entry["ck"], entry["cv"]
@@ -490,7 +553,7 @@ def forward_cached(
             xx, attn_entry_new, a = attn_block_cached(
                 params["shared_attn"], xx, positions, pos1d, cfg, ctx,
                 attn_entry, kv_pos, slots, use_moe=False, window=window,
-                attn_impl=attn_impl, x_extra=emb0,
+                attn_impl=attn_impl, x_extra=emb0, paged=paged,
             )
             return (xx, aux + a), (st_group_new, attn_entry_new)
 

@@ -21,6 +21,16 @@ Sliding-window configs use a ring buffer: capacity == window and slots are
 ``(cur + arange(m)) % capacity`` (see ``write_slots``); masking relies on the
 explicit ``pos`` array, so ring order is irrelevant to attention.
 
+Block-paged variant (``CacheConfig.kind="paged"``, docs/architecture.md):
+same logical layout and ``pos``/``cur`` semantics, but the attention
+entries become page POOLS — ``(L, num_pages, page_size, Hkv, hd)`` instead
+of ``(L, B, C, Hkv, hd)`` — plus a ``page_table`` (B, NB) int32 mapping
+each row's logical blocks to physical pages.  ``gather_pages`` reconstructs
+the per-row logical view for attention; unmapped blocks read the reserved
+trash page (entry 0), whose contents are always position-masked.  The
+physical footprint is live tokens (page-granular), not batch-lifetime
+capacity — the unlock for long continuous-batching queues.
+
 Sharding (DESIGN.md §7): batch -> (pod,data); kv-heads -> model when
 divisible, otherwise the capacity dim C -> model (GSPMD inserts the
 partial-softmax collectives); MLA latent and SSM state follow the same rule
@@ -28,14 +38,66 @@ partial-softmax collectives); MLA latent and SSM state follow the same rule
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models.ssm import ssm_dims
-from repro.models.transformer import write_slots  # noqa: F401  (re-export)
+from repro.models.transformer import (  # noqa: F401  (re-exports)
+    gather_pages,
+    scatter_pages,
+    write_slots,
+)
 from repro.sharding.partition import ShardCtx
+
+
+#: physical page id reserved as the trash page — never handed out by the
+#: allocator; unmapped page-table entries point here, so stray writes from
+#: rows without a mapping land in it and every read of it is position-masked
+PAGE_TRASH = 0
+
+#: cache leaf names stored as page pools in a paged cache (attention K/V and
+#: the MLA latent/rope entries — everything with a capacity axis)
+POOLED_LEAVES = ("k", "v", "c", "kr")
+
+
+def page_align(n_slots: int, page_size: int) -> int:
+    """Round a slot count up to a whole number of pages."""
+    return -(-n_slots // page_size) * page_size
+
+
+@dataclasses.dataclass
+class CacheConfig:
+    """KV-cache backend selection for the serving stack.
+
+    ``kind="ring"`` is the classic dense ring buffer: ``capacity`` logical
+    slots are physically allocated per batch row, so capacity is a
+    batch-lifetime bound (``SlotScheduler.required_capacity``).
+
+    ``kind="paged"`` keeps the same logical addressing but backs it with a
+    block-paged pool (``num_pages`` pages of ``page_size`` slots each,
+    shared by all rows): physical memory is bounded by LIVE tokens, a
+    request's pages return to the free list the moment it exits, and
+    admission becomes per-block bookkeeping (``scheduler.PageAllocator``).
+    See docs/architecture.md — the paged path reproduces the ring path's
+    token streams, exit steps, and EAT trajectories exactly.
+    """
+
+    kind: str = "ring"                 # "ring" | "paged"
+    page_size: int = 16                # logical slots per physical page
+    # 0 = auto: ring-equivalent pool (batch * capacity/page_size data pages
+    # + the trash page) — never refuses an admission the ring would accept
+    num_pages: int = 0
+
+    def __post_init__(self):
+        if self.kind not in ("ring", "paged"):
+            raise ValueError(f"CacheConfig.kind must be 'ring' or 'paged', "
+                             f"got {self.kind!r}")
+        if self.page_size < 1:
+            raise ValueError("CacheConfig.page_size must be >= 1")
 
 
 def _attn_entry(cfg: ModelConfig, lead: tuple[int, ...], B: int, C: int, dtype):
@@ -104,6 +166,177 @@ def alloc_cache(cfg: ModelConfig, batch: int, capacity: int, dtype=None) -> dict
     return cache
 
 
+# ------------------------------------------------------------ paged variant
+
+
+def _pooled_attn_entry(cfg: ModelConfig, lead: tuple[int, ...],
+                       num_pages: int, page_size: int, dtype):
+    """Page-pool form of ``_attn_entry``: (B, C) -> (num_pages, page_size)."""
+    hd = cfg.resolved_head_dim
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {
+            "c": jnp.zeros(lead + (num_pages, page_size, m.kv_lora_rank), dtype),
+            "kr": jnp.zeros(lead + (num_pages, page_size, m.qk_rope_head_dim), dtype),
+        }
+    return {
+        "k": jnp.zeros(lead + (num_pages, page_size, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros(lead + (num_pages, page_size, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+def alloc_paged_cache(cfg: ModelConfig, batch: int, capacity: int,
+                      page_size: int, num_pages: int, dtype=None) -> dict:
+    """Allocate an empty block-paged cache.
+
+    ``capacity`` is the LOGICAL ring length (must be a page multiple); the
+    physical K/V footprint is ``num_pages * page_size`` slots shared by all
+    ``batch`` rows through the page table (initialised all-trash).  Leaves
+    without a capacity axis (SSM/conv states, encdec cross K/V) stay dense —
+    they are per-row recurrent state, not slot-addressed storage.
+    """
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    if capacity % page_size:
+        raise ValueError(f"paged capacity {capacity} must be a multiple of "
+                         f"page_size {page_size}")
+    if num_pages < 2:
+        raise ValueError("num_pages must be >= 2 (page 0 is the trash page)")
+    B, NB = batch, capacity // page_size
+    cache: dict = {
+        "pos": jnp.full((B, capacity), -1, jnp.int32),
+        "cur": jnp.zeros((), jnp.int32),
+        "page_table": jnp.full((B, NB), PAGE_TRASH, jnp.int32),
+    }
+    if cfg.arch_type in ("dense", "vlm"):
+        cache["layers"] = {
+            "seg": _pooled_attn_entry(cfg, (cfg.n_layers,), num_pages, page_size, dtype)
+        }
+    elif cfg.arch_type == "moe":
+        fk = cfg.moe.first_k_dense
+        layers = {}
+        if fk:
+            layers["dense_seg"] = _pooled_attn_entry(cfg, (fk,), num_pages, page_size, dtype)
+        layers["moe_seg"] = _pooled_attn_entry(
+            cfg, (cfg.n_layers - fk,), num_pages, page_size, dtype)
+        cache["layers"] = layers
+    elif cfg.arch_type == "encdec":
+        T = cfg.encoder_len
+        entry = _pooled_attn_entry(cfg, (cfg.n_layers,), num_pages, page_size, dtype)
+        hd = cfg.resolved_head_dim
+        entry["ck"] = jnp.zeros((cfg.n_layers, B, T, cfg.n_kv_heads, hd), dtype)
+        entry["cv"] = jnp.zeros((cfg.n_layers, B, T, cfg.n_kv_heads, hd), dtype)
+        cache["layers"] = {"dec_seg": entry}
+        cache["enc_pos"] = jnp.zeros((B, T), jnp.int32)
+    elif cfg.arch_type == "hybrid":
+        pat = cfg.hybrid_pattern
+        n_per = sum(1 for k in pat if k == "ssm")
+        G = cfg.n_layers // len(pat)
+        cache["layers"] = {
+            "ssm_seg": _ssm_entry(cfg, (G, n_per), B, dtype),
+            "attn_seg": _pooled_attn_entry(cfg, (G,), num_pages, page_size, dtype),
+        }
+    elif cfg.arch_type == "ssm":
+        raise ValueError("arch 'ssm' has no KV capacity axis to page — use "
+                         "the ring cache (its state is O(1) per row already)")
+    else:
+        raise ValueError(cfg.arch_type)
+    return cache
+
+
+# pool rank of a single-layer pooled entry (page, page_size, ...tail); any
+# extra leading axes are layer stacks
+_POOL_NDIM = {"k": 4, "v": 4, "c": 3, "kr": 3}
+
+
+def _is_pooled(path: str) -> bool:
+    return path.startswith("layers/") and path.split("/")[-1] in POOLED_LEAVES
+
+
+def pack_paged_cache(paged: dict, dense: dict, table) -> dict:
+    """Scatter a freshly prefilled DENSE cache into an empty paged cache —
+    the serve()-start conversion (one jitted dispatch, ``paged`` donated).
+
+    ``dense`` has prefill capacity C_pre (a page multiple, C_pre <= logical
+    capacity); ``table`` is the allocator's (B, NB) page table with the
+    prompt blocks mapped.  Blocks of ``dense`` beyond a row's mapped prompt
+    scatter into the trash page (zeros over garbage — a don't-care).
+    Non-pooled leaves (SSM/conv state, cross K/V, enc_pos) copy wholesale.
+    """
+    from repro.utils.treeutil import tree_flatten_with_paths
+
+    NB = table.shape[1]
+    ps = paged["pos"].shape[1] // NB
+    C_pre = dense["pos"].shape[1]
+    nbp = C_pre // ps
+    flat_d = dict(tree_flatten_with_paths(dense))
+    merged = []
+    for path, leaf in tree_flatten_with_paths(paged):
+        name = path.split("/")[-1]
+        if name == "page_table":
+            merged.append(jnp.asarray(table, jnp.int32))
+        elif name == "pos":
+            merged.append(leaf.at[:, :C_pre].set(dense["pos"]))
+        elif name == "cur":
+            merged.append(dense["cur"])
+        elif _is_pooled(path):
+            src = flat_d[path]
+            lead = leaf.ndim - _POOL_NDIM[name]
+            B = src.shape[lead]
+            tail = src.shape[lead + 2:]
+            srcb = src.reshape(src.shape[:lead] + (B, nbp, ps) + tail)
+            idx = (slice(None),) * lead + (table[:, :nbp],)
+            merged.append(leaf.at[idx].set(srcb.astype(leaf.dtype)))
+        else:
+            merged.append(flat_d[path])
+    treedef = jax.tree_util.tree_structure(paged)
+    return jax.tree_util.tree_unflatten(treedef, merged)
+
+
+def merge_paged_row(cache: dict, one: dict, row, row_table) -> dict:
+    """Paged-cache slot admission: write the single-sequence DENSE cache
+    ``one`` (batch=1, prefill capacity C_pre) into batch row ``row``.
+
+    The paged analog of ``merge_cache_row``: the row's page-table entry is
+    replaced by ``row_table`` (the allocator's fresh mapping: prompt blocks
+    + the current decode block), the prompt K/V scatter into those pages,
+    the row's logical ``pos`` is replaced (tail stays -1), and ``cur``
+    advances to ``max(cur, one_cur)`` — identical ring semantics, so the
+    admitted row's token stream matches the ring path's bit-for-bit.
+    """
+    from repro.utils.treeutil import tree_flatten_with_paths
+
+    C = cache["pos"].shape[1]
+    NB = cache["page_table"].shape[1]
+    ps = C // NB
+    C_pre = one["pos"].shape[1]
+    nbp = C_pre // ps
+    flat_one = dict(tree_flatten_with_paths(one))
+    merged = []
+    for path, leaf in tree_flatten_with_paths(cache):
+        name = path.split("/")[-1]
+        if name == "page_table":
+            merged.append(leaf.at[row].set(jnp.asarray(row_table, jnp.int32)))
+        elif name == "pos":
+            row_pos = jnp.full((C,), -1, jnp.int32).at[:C_pre].set(one["pos"][0])
+            merged.append(leaf.at[row].set(row_pos))
+        elif name == "cur":
+            merged.append(jnp.maximum(leaf, one["cur"]))
+        elif _is_pooled(path):
+            src = flat_one[path]
+            lead = leaf.ndim - _POOL_NDIM[name]
+            tail = src.shape[lead + 2:]
+            srcb = src[(slice(None),) * lead + (0,)]
+            srcb = srcb.reshape(src.shape[:lead] + (nbp, ps) + tail)
+            idx = (slice(None),) * lead + (jnp.asarray(row_table)[:nbp],)
+            merged.append(leaf.at[idx].set(srcb.astype(leaf.dtype)))
+        else:
+            src = flat_one[path]
+            lead = (leaf.ndim - _BASE_NDIM[name]
+                    if path.startswith("layers/") else 0)
+            idx = (slice(None),) * lead + (row,)
+            merged.append(leaf.at[idx].set(src[(slice(None),) * lead + (0,)]))
+    treedef = jax.tree_util.tree_structure(cache)
+    return jax.tree_util.tree_unflatten(treedef, merged)
 
 
 # per-leaf rank of a single-sequence (no stacked-layer axes) cache entry;
@@ -176,18 +409,36 @@ def freeze_inactive_rows(new_cache: dict, old_cache: dict, active) -> dict:
 
 
 def cache_pspecs(cfg: ModelConfig, ctx: ShardCtx, cache) -> dict:
-    """PartitionSpec pytree for a cache (for jit in/out shardings)."""
+    """PartitionSpec pytree for a cache (for jit in/out shardings).
+
+    Paged caches (``page_table`` present): the page POOLS shard over the
+    model axis — kv-heads when divisible, else the page_size axis (the
+    paged analog of capacity-sharding) — and replicate over the data axis
+    (pages are shared by all batch rows, so there is no batch dim to ride
+    it); page tables and the logical ``pos`` replicate / ride data exactly
+    like the ring metadata.
+    """
     if ctx.mesh is None:
         return jax.tree_util.tree_map(lambda _: P(), cache)
     m = ctx.model_axis
     ms = ctx.model_size
     kv_on_model = cfg.n_kv_heads % ms == 0 and cfg.mla is None
+    paged = "page_table" in cache
     # batch=1 shapes (long_500k) cannot shard the batch axis
     bsz = cache["pos"].shape[0] if hasattr(cache["pos"], "shape") else 1
     b = ctx.batch_entry_for(bsz)
 
+    def pool_spec_for(path_leaf: str, lead: int) -> P:
+        # pooled entries: (lead..., num_pages, page_size, ...tail)
+        if path_leaf in ("k", "v"):
+            if kv_on_model:
+                return P(*([None] * lead), None, None, m, None)
+            return P(*([None] * lead), None, m, None, None)  # shard page_size
+        return P(*([None] * lead), None, m, None)            # c/kr
     def spec_for(path_leaf: str, ndim: int, lead: int) -> P:
         # lead = number of stacked layer axes before the batch axis
+        if path_leaf == "page_table":
+            return P(None, None)                             # replicated
         if path_leaf in ("k", "v", "ck", "cv"):
             if kv_on_model:
                 return P(*([None] * lead), b, None, m, None)
@@ -215,6 +466,9 @@ def cache_pspecs(cfg: ModelConfig, ctx: ShardCtx, cache) -> dict:
             specs.append(P())
             continue
         # count stacked lead axes: layers/<seg>/... entries have ndim-known
+        if paged and _is_pooled(path):
+            specs.append(pool_spec_for(leafname, leaf.ndim - _POOL_NDIM[leafname]))
+            continue
         lead = 0
         if parts[0] == "layers":
             lead = leaf.ndim - _BASE_NDIM[leafname]

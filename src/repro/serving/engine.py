@@ -47,25 +47,34 @@ import numpy as np
 from repro.core.eat import ProbeSpec
 from repro.core.monitor import ReasoningMonitor
 from repro.models.model import Model
-from repro.serving.cache import alloc_cache
+from repro.serving.cache import (
+    CacheConfig,
+    alloc_cache,
+    alloc_paged_cache,
+    page_align,
+)
 from repro.serving.executor import Executor, ServeState, positions_for
 from repro.serving.request import Request
 from repro.serving.sampler import SamplerConfig, sample
-from repro.serving.scheduler import SlotScheduler
+from repro.serving.scheduler import PageAllocator, SlotScheduler
 
-__all__ = ["EngineConfig", "ReasoningEngine", "ServeState"]
+__all__ = ["CacheConfig", "EngineConfig", "ReasoningEngine", "ServeState"]
 
 
 @dataclasses.dataclass
 class EngineConfig:
     max_reasoning_tokens: int = 1024
-    capacity: int = 2048                 # cache slots
+    capacity: int = 2048                 # cache slots (logical, when paged)
     pad_id: int = 0
     end_think_id: int = 1
     newline_id: int = 2
     eos_id: int = 3
     chunk_len: int = 32                  # decode steps per jitted dispatch
     sampler: SamplerConfig = dataclasses.field(default_factory=SamplerConfig)
+    # KV-cache backend for serve(): ring (dense, capacity is a batch-
+    # lifetime bound) or paged (block pool, capacity is per-block
+    # bookkeeping — docs/serving.md)
+    cache: CacheConfig = dataclasses.field(default_factory=CacheConfig)
 
 
 class ReasoningEngine:
@@ -99,10 +108,14 @@ class ReasoningEngine:
 
     # ------------------------------------------------------------- prefill
     def start(self, prompts: jax.Array, prompt_len: jax.Array, rng,
-              *, frames=None, image_embeds=None) -> ServeState:
+              *, frames=None, image_embeds=None,
+              capacity: int | None = None) -> ServeState:
         """prompts: (B, S) LEFT-padded token ids; prompt_len: (B,).
 
         Positions are 0..len-1 per sequence (pad slots get -1 = masked).
+        ``capacity`` overrides ``EngineConfig.capacity`` (the paged serve
+        path prefills into a prompt-sized dense cache and packs it into the
+        page pool afterwards).
         """
         model, ecfg = self.model, self.ecfg
         B, S = prompts.shape
@@ -116,7 +129,7 @@ class ReasoningEngine:
                 jnp.arange(n_img, dtype=jnp.int32)[None], (B, n_img)
             )
             pos1d = jnp.concatenate([img_pos, jnp.where(pos1d >= 0, pos1d + n_img, -1)], 1)
-        cache = alloc_cache(model.cfg, B, ecfg.capacity)
+        cache = alloc_cache(model.cfg, B, capacity or ecfg.capacity)
         hidden, cache = self.executor.prefill(
             self.params, prompts, self._positions(pos1d), pos1d, cache,
             frames=frames, image_embeds=image_embeds,
@@ -212,6 +225,17 @@ class ReasoningEngine:
         harvested, the next queued prompt is prefilled (B=1) and merged into
         the slot, and the chunked decode resumes with the batch still full.
 
+        With ``EngineConfig.cache.kind == "paged"`` the KV store is the
+        block-paged pool (docs/serving.md): an exiting request's pages are
+        reclaimed at harvest and back the very next admission, and the
+        token streams/exit steps/EAT trajectories are bit-identical to the
+        ring path's.  Backpressure is admission-time only — an admission
+        waits (rather than failing) while the pool is momentarily full,
+        but the optimistic prompt+one-page admission rule means a pool
+        undersized for the RESIDENT batch (below ~batch * (prompt + budget
+        + probe) / page_size pages) can still exhaust mid-decode, which
+        fails fast with a sizing hint rather than corrupting neighbours.
+
         Returns one dict per request (in request order): the pre-refactor
         keys (``reasoning_tokens``, ``n_reasoning``, ``ended_think``, and —
         when ``answer_len`` > 0 — the greedy forced-answer
@@ -223,10 +247,12 @@ class ReasoningEngine:
         prompts_np = np.asarray(prompts)
         plen_np = np.asarray(prompt_len)
         n_req = prompts_np.shape[0]
+        S = prompts_np.shape[1]
         B = min(batch_size, n_req)
         budget = int(max_tokens or self.ecfg.max_reasoning_tokens)
         budget_dev = jnp.asarray(budget, jnp.int32)
-        chunk = jnp.asarray(max(1, chunk_len or self.ecfg.chunk_len), jnp.int32)
+        chunk_py = max(1, chunk_len or self.ecfg.chunk_len)
+        chunk = jnp.asarray(chunk_py, jnp.int32)
 
         requests = [
             Request(rid=i, prompt=prompts_np[i], prompt_len=int(plen_np[i]))
@@ -235,16 +261,69 @@ class ReasoningEngine:
         sched = SlotScheduler(requests, B, capacity=self.ecfg.capacity,
                               budget=budget)
 
+        # ---- cache backend (docs/serving.md): the paged path keeps the
+        # ring's logical addressing but backs it with a page pool, so the
+        # host loop additionally (a) maps pages for every slot range a
+        # dispatch may write, (b) pushes the allocator's table before each
+        # dispatch, (c) frees a request's pages at harvest
+        ccfg = self.ecfg.cache
+        paged = ccfg.kind == "paged"
+        alloc = None
+        if paged:
+            ps = ccfg.page_size
+            C_log = page_align(self.ecfg.capacity, ps)
+            n_blocks = C_log // ps
+            num_pages = ccfg.num_pages or (B * n_blocks + 1)
+            alloc = PageAllocator(num_pages, ps, n_blocks, B)
+            C_pre = page_align(S, ps)      # prompt-sized prefill capacity
+            probe_m = len(self.monitor.probe)
+
         cohort = sched.start_batch()
         rng, sub = jax.random.split(rng)
         state = self.start(jnp.asarray(prompts_np[:B]),
-                           jnp.asarray(plen_np[:B]), sub)
+                           jnp.asarray(plen_np[:B]), sub,
+                           capacity=C_pre if paged else None)
+        if paged:
+            for req in cohort:
+                alloc.ensure(req.slot, 0, S - 1)       # the prompt pages
+            template = alloc_paged_cache(self.model.cfg, B, C_log, ps,
+                                         num_pages)
+            state = state._replace(cache=self.executor.pack_paged(
+                template, state.cache, alloc.table))
         for req in cohort:
             req.begin_decode()
         sched.check_capacity(int(state.cache["cur"]), "the initial batch")
 
+        def ensure_pages(span: int, *, clamp_to_budget: bool = False):
+            """Map (and push) pages covering the next ``span`` logical
+            slots for every occupied slot before a writing dispatch.  With
+            ``clamp_to_budget`` the span is cut per row to the tokens it
+            can still emit plus the probe tail (a row never decodes past
+            its budget, so pages past it would be reserved-but-never-
+            written — enough waste to break the documented pool sizing
+            rule when chunk_len exceeds the remaining budget).  The table
+            upload is skipped while the mapping is unchanged (steady
+            decode inside a block)."""
+            cur0 = int(state.cache["cur"])
+            n_r = np.asarray(state.n_reasoning) if clamp_to_budget else None
+            for s, _ in sched.bound():
+                sp = span
+                if n_r is not None:
+                    left = max(1, budget - int(n_r[s]))
+                    sp = min(span, left + probe_m)
+                alloc.ensure(s, cur0, cur0 + sp)
+            if not alloc.dirty:
+                return state
+            return self.executor.put_page_table(state, alloc.snapshot())
+
         while sched.running:
             if bool(state.active.any()):
+                if paged:
+                    # a chunk writes <= chunk_len decode tokens (fewer for
+                    # rows near their budget), each probe another
+                    # len(probe) slots past the decode slot
+                    state = ensure_pages(chunk_py + probe_m,
+                                         clamp_to_budget=True)
                 state = self.executor.decode_chunk(
                     self.params, state, budget_dev, chunk,
                     use_monitor=use_monitor,
@@ -265,6 +344,9 @@ class ReasoningEngine:
             # rows) BEFORE any slot is overwritten by an admission
             ans = None
             if answer_len:
+                if paged:
+                    # a rollout writes </think> + answer_len slots past cur
+                    state = ensure_pages(answer_len + 1)
                 toks, _ = self.force_answer(state, answer_len, greedy=True)
                 ans = np.asarray(toks)
             out_tokens = np.asarray(state.out_tokens)
@@ -281,20 +363,49 @@ class ReasoningEngine:
                     eat_stop=bool(eat_stop[s]),
                     answer_tokens=ans[s].copy() if ans is not None else None,
                 )
-            for s, _ in done:
+                if paged:
+                    # reclaim the moment a request exits: these pages back
+                    # the admissions below, in the same batch
+                    alloc.free_row(s)
+            # admission sweeps EVERY free slot, not just this round's
+            # harvested ones: a paged admission deferred earlier (pool
+            # momentarily full) left its slot empty, and the pages freed
+            # just above are what let it proceed now.  (For the ring this
+            # is identical to sweeping ``done``: a ring slot is only ever
+            # left empty once the queue has drained.)
+            for s in (s for s, r in enumerate(sched.slots) if r is None):
                 if sched.pending == 0:
                     continue
                 # refuse BEFORE popping the queue: a capacity failure must
                 # leave the scheduler consistent (no stranded PREFILLING
-                # request holding a slot)
+                # request holding a slot).  The logical-ring wrap guard
+                # applies to BOTH backends (paged keeps ring addressing);
+                # the paged page check DEFERS instead of refusing — the
+                # request stays queued until an exit frees enough pages.
                 sched.check_capacity(int(state.cache["cur"]),
                                      "another admission")
+                if paged and not alloc.can_admit(S):
+                    continue
                 nxt = sched.admit_next(s)
                 rng, sub = jax.random.split(rng)
                 one = self.start(jnp.asarray(nxt.prompt[None]),
-                                 jnp.asarray([nxt.prompt_len]), sub)
-                state = self._admit(state, one, s)
+                                 jnp.asarray([nxt.prompt_len]), sub,
+                                 capacity=C_pre if paged else None)
+                if paged:
+                    row_table = alloc.admit_row(s, S,
+                                                int(state.cache["cur"]))
+                    state = self.executor.admit_paged(state, one, s,
+                                                      row_table)
+                else:
+                    state = self._admit(state, one, s)
                 nxt.begin_decode()
+            if paged and sched.pending and not sched.running:
+                raise RuntimeError(
+                    f"paged KV cache cannot hold a single request: "
+                    f"{alloc.free_pages} pages free with every slot empty, "
+                    f"but a prompt needs {alloc.blocks_for(S) + 1} pages. "
+                    f"Raise CacheConfig.num_pages."
+                )
         return [r.to_result() for r in requests]
 
     # ------------------------------------------------------------- answers

@@ -1,11 +1,17 @@
 """Executor layer: every jitted device program of the serving stack.
 
 This is the bottom of the three-layer serving architecture
-(``request.py`` -> ``scheduler.py`` -> ``executor.py``):
+(``request.py`` -> ``scheduler.py`` -> ``executor.py``; contracts and
+diagram in docs/architecture.md):
 
   * ``request``   — per-request lifecycle state machine (host metadata),
   * ``scheduler`` — slot allocation + admission policy (pure host Python),
   * ``executor``  — the device programs those layers drive.
+
+Contract: ALL jax lives at or below this layer (the request/scheduler
+layers are host-only), and every program that mutates decode state follows
+the consumes-state donation rule spelled out below — a caller that passes
+a state to a donating program must treat that state as dead.
 
 The executor owns the canonical single-token EAT step (``make_eat_step`` —
 moved here from ``launch.serve_step`` so exactly one serve-step definition
@@ -19,6 +25,8 @@ exists in the tree) and builds every program the engine dispatches:
   probe          non-committing EAT evaluation   (never donated — the cache
                                                   must survive the probe)
   admit          slot recycling row-merge        (resident state DONATED)
+  admit_paged    row-merge through a page table  (resident state DONATED)
+  pack_paged     dense prefill -> page pool      (paged cache DONATED)
   rollout        forced answer generation        (NOT donated: callers keep
                                                   decoding from / re-rolling
                                                   the same live cache)
@@ -52,9 +60,23 @@ from repro.core.eat import ProbeSpec, eval_eat
 from repro.core.monitor import MonitorState, ReasoningMonitor
 from repro.core.stopping import EATStopper
 from repro.models.model import Model
-from repro.serving.cache import cache_pspecs, freeze_inactive_rows, merge_cache_row
+from repro.serving.cache import (
+    cache_pspecs,
+    freeze_inactive_rows,
+    merge_cache_row,
+    merge_paged_row,
+    pack_paged_cache,
+)
 from repro.serving.sampler import SamplerConfig, logprob_of, sample
 from repro.sharding.partition import param_pspecs, serve_state_pspecs
+
+
+def cache_kind(cache: dict) -> str:
+    """'paged' when the cache routes K/V through a page table, else 'ring'.
+    Program-cache keys include this: the two kinds have different pytree
+    structures, so their jitted programs (and mesh in/out shardings) are
+    built separately."""
+    return "paged" if "page_table" in cache else "ring"
 
 
 def mesh_ns(ctx, spec: P) -> NamedSharding:
@@ -305,7 +327,7 @@ class Executor:
         # (tests/test_executor.py), which A/Bs the compiled memory stats of
         # the same program with and without the in-place cache alias.
         B = int(state.active.shape[0])
-        key = ("chunk", B, use_monitor, donate)
+        key = ("chunk", B, use_monitor, donate, cache_kind(state.cache))
         if key not in self._programs:
             step_fn = self._step_mon if use_monitor else self._step_plain
 
@@ -351,7 +373,7 @@ class Executor:
         per-token baseline for ``benchmarks/engine_throughput.py`` and unit
         tests (so the two paths can never diverge).  No donation: the
         benchmarks re-time it against one fixed state."""
-        key = ("decode", int(state.active.shape[0]))
+        key = ("decode", int(state.active.shape[0]), cache_kind(state.cache))
         if key not in self._programs:
             def fn(params, st: ServeState):
                 no_budget = jnp.asarray(jnp.iinfo(jnp.int32).max, jnp.int32)
@@ -413,7 +435,7 @@ class Executor:
     def probe(self, params, cache, next_pos):
         """Non-committing EAT probe over the live cache.  Never donated —
         the whole point is that the cache survives the evaluation."""
-        key = ("probe", int(next_pos.shape[0]))
+        key = ("probe", int(next_pos.shape[0]), cache_kind(cache))
         if key not in self._programs:
             model, monitor = self.model, self.monitor
 
@@ -471,6 +493,91 @@ class Executor:
             self._programs[key] = jitted
         return self._programs[key](state, one, jnp.asarray(slot, jnp.int32))
 
+    # ------------------------------------------------------ paged programs
+    def pack_paged(self, paged_cache: dict, dense_cache: dict, table) -> dict:
+        """Scatter a freshly prefilled dense cache into an empty paged
+        cache (serve()-start conversion).  DONATES ``paged_cache`` — the
+        pools are updated in place, same contract as every other
+        cache-consuming program."""
+        B = int(paged_cache["pos"].shape[0])
+        C_pre = int(dense_cache["pos"].shape[1])
+        key = ("pack", B, C_pre)
+        if key not in self._programs:
+            if self.ctx.mesh is None:
+                jitted = jax.jit(pack_paged_cache, donate_argnums=0)
+            else:
+                jitted = jax.jit(
+                    pack_paged_cache,
+                    in_shardings=(
+                        self._sh(cache_pspecs(self.cfg, self.ctx, paged_cache)),
+                        self._sh(cache_pspecs(self.cfg, self.ctx, dense_cache)),
+                        self._ns(P(None, None)),
+                    ),
+                    out_shardings=self._sh(
+                        cache_pspecs(self.cfg, self.ctx, paged_cache)),
+                    donate_argnums=0,
+                )
+            self._programs[key] = jitted
+        return self._programs[key](paged_cache, dense_cache,
+                                   jnp.asarray(table, jnp.int32))
+
+    def admit_paged(self, state: ServeState, one: ServeState, slot,
+                    row_table) -> ServeState:
+        """Paged-cache slot recycling: like ``admit``, but the cache merge
+        routes the admitted prompt K/V through ``row_table`` (the
+        allocator's fresh page mapping for the slot — prompt blocks plus
+        one decode page).  ``slot`` and ``row_table`` are traced, so
+        admissions into different slots share the compilation.  DONATES
+        ``state``."""
+        key = ("admit", int(state.active.shape[0]), "paged",
+               int(one.cache["pos"].shape[1]))
+        if key not in self._programs:
+            def fn(state: ServeState, one: ServeState, slot,
+                   row_table) -> ServeState:
+                def put(big, small):
+                    return big.at[slot].set(small[0])
+
+                return ServeState(
+                    cache=merge_paged_row(state.cache, one.cache, slot,
+                                          row_table),
+                    rng=state.rng,
+                    active=put(state.active, one.active),
+                    next_pos=put(state.next_pos, one.next_pos),
+                    last_token=put(state.last_token, one.last_token),
+                    n_reasoning=put(state.n_reasoning, one.n_reasoning),
+                    monitor=jax.tree_util.tree_map(put, state.monitor,
+                                                   one.monitor),
+                    ended_think=put(state.ended_think, one.ended_think),
+                    out_tokens=put(state.out_tokens, one.out_tokens),
+                    out_len=put(state.out_len, one.out_len),
+                )
+
+            if self.ctx.mesh is None:
+                jitted = jax.jit(fn, donate_argnums=0)
+            else:
+                ssh = self._state_sh(state)
+                jitted = jax.jit(
+                    fn,
+                    in_shardings=(ssh, self._state_sh(one), self._ns(P()),
+                                  self._ns(P(None))),
+                    out_shardings=ssh,
+                    donate_argnums=0,
+                )
+            self._programs[key] = jitted
+        return self._programs[key](state, one, jnp.asarray(slot, jnp.int32),
+                                   jnp.asarray(row_table, jnp.int32))
+
+    def put_page_table(self, state: ServeState, table) -> ServeState:
+        """Swap the host allocator's page table into the state (replicated
+        on the mesh).  Host->device upload of a few KB of int32 — called
+        once per chunk boundary, never inside a jitted program."""
+        dev = jnp.asarray(table, jnp.int32)
+        if self.ctx.mesh is not None:
+            dev = jax.device_put(dev, self._ns(P(None, None)))
+        cache = dict(state.cache)
+        cache["page_table"] = dev
+        return state._replace(cache=cache)
+
     def rollout(self, params, cache, next_pos, last_token, rng, *, n: int,
                 greedy: bool = False):
         """Forced answer rollout: append </think> then generate n tokens.
@@ -479,7 +586,7 @@ class Executor:
         decoding from (``reason_with_trace``) or re-rolls K times
         (``rollout_answers``) — donation here would corrupt the sequence."""
         B = int(next_pos.shape[0])
-        key = ("rollout", B, n, greedy)
+        key = ("rollout", B, n, greedy, cache_kind(cache))
         if key not in self._programs:
             model, cfg, ecfg = self.model, self.cfg, self.ecfg
 

@@ -1,11 +1,14 @@
 """Request layer: the per-request lifecycle state machine.
 
 Top of the three-layer serving stack (``request`` -> ``scheduler`` ->
-``executor``).  A ``Request`` is pure host-side metadata — the prompt, the
-lifecycle status, the EAT trace snapshots the serve loop records at chunk
-boundaries, and the exit-reason tag set at harvest.  No jax anywhere: the
+``executor``; see docs/architecture.md).  Contract: a ``Request`` is pure
+host-side metadata — the prompt, the lifecycle status, the EAT trace
+snapshots the serve loop records at chunk boundaries, and the exit-reason
+tag set at harvest.  The no-jax-on-host rule applies: nothing in this
+module (or ``scheduler``) may import jax or hold device arrays — the
 device-resident counterpart of a DECODING request is one batch row of the
-executor's ``ServeState``.
+executor's ``ServeState``, reached only through executor programs, and the
+serve loop converts between the two exactly once per chunk boundary.
 
 Lifecycle::
 

@@ -2,25 +2,38 @@
 batching.
 
 Middle of the three-layer serving stack (``request`` -> ``scheduler`` ->
-``executor``).  Pure host-side Python — deliberately NO jax import: every
-decision here is a list/deque operation over ``Request`` objects, so the
-policy can be unit-tested without touching a device and swapped (priority
-queues, per-tenant fairness, paged admission) without re-tracing any
-program.
+``executor``; see docs/architecture.md).  Contract: pure host-side Python —
+deliberately NO jax import (numpy only, for the page table): every decision
+here is a list/deque operation over ``Request`` objects, so the policy can
+be unit-tested without touching a device and swapped (priority queues,
+per-tenant fairness, paged admission) without re-tracing any program.  The
+scheduler never holds device state; its device-facing outputs are plain
+integers (slot ids) and the int32 page table the engine pushes to the
+executor.
 
 The policy is FIFO continuous batching: ``batch_size`` slots, a queue of
 QUEUED requests, and the invariant that a slot freed by an early-exiting
 sequence is refilled immediately (the executor's ``admit`` program merges
-the freshly prefilled row in).  The scheduler also owns the cache-ring
-capacity guard: ``cur`` advances one shared slot per batch-wide decode step
-and never rewinds, so a wrap would silently overwrite live KV rows — we
-refuse the admission instead.
+the freshly prefilled row in).
+
+Capacity policy is per cache backend (``serving.cache.CacheConfig``):
+
+* ring — the scheduler owns the cache-ring capacity guard: ``cur`` advances
+  one shared slot per batch-wide decode step and never rewinds, so a wrap
+  would silently overwrite live KV rows; ``check_capacity`` refuses the
+  admission instead, making capacity a BATCH-LIFETIME bound.
+* paged — ``PageAllocator`` turns the same check into per-block
+  bookkeeping at admission time: admit whenever the free list covers the
+  prompt blocks plus one decode page; an exiting request's pages return to
+  the free list at harvest and immediately back the next admission.
 """
 from __future__ import annotations
 
 import math
 from collections import deque
 from typing import Iterator, Optional
+
+import numpy as np
 
 from repro.serving.request import Request, RequestStatus
 
@@ -118,3 +131,125 @@ class SlotScheduler:
                 f"to the batch-lifetime token count "
                 f"(~prompt_width + ceil(n_requests / batch_size) * budget)."
             )
+
+
+class PageAllocator:
+    """Free-page bookkeeping for the block-paged KV cache (pure host).
+
+    Owns the authoritative page table: a (batch, n_blocks) int32 array
+    mapping each row's logical blocks (``slot // page_size``) to physical
+    pages of the executor-side pool.  Page ``serving.cache.PAGE_TRASH`` (0)
+    is reserved: unmapped entries point at it, so a row without a mapping
+    writes into (and reads position-masked garbage from) the trash page
+    instead of corrupting a neighbour.  The engine pushes ``table`` to the
+    device before every chunk dispatch (replicated — a few KB of int32).
+
+    This is what turns the ring cache's batch-lifetime capacity bound into
+    per-block bookkeeping: ``can_admit`` asks only whether the free list
+    covers the prompt plus one decode page, and ``free_row`` returns an
+    exiting request's pages to the free list the moment it is harvested —
+    in the same batch, those pages back the next admission.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, n_blocks: int,
+                 batch: int):
+        if num_pages < 2:
+            raise ValueError("num_pages must be >= 2 (page 0 is reserved "
+                             "as the trash page)")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.n_blocks = n_blocks
+        self.table = np.zeros((batch, n_blocks), np.int32)
+        # LIFO free list -> a freed page is the next one handed out, which
+        # maximises page reuse within a batch (and the reuse counter below
+        # proves it happened)
+        self.free: list[int] = list(range(num_pages - 1, 0, -1))
+        self._owned: list[list[int]] = [[] for _ in range(batch)]
+        self._ever_used: set[int] = set()
+        self.pages_reused = 0
+        self.peak_pages_in_use = 0
+        # True whenever self.table differs from the last snapshot() — the
+        # engine skips the per-chunk host->device table upload when clean
+        self.dirty = True
+
+    # ------------------------------------------------------------- queries
+    @property
+    def free_pages(self) -> int:
+        return len(self.free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return (self.num_pages - 1) - len(self.free)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def can_admit(self, prompt_tokens: int) -> bool:
+        """Admission rule: free pages must cover the prompt blocks plus one
+        decode page.  (The decode page is usually shared with the batch's
+        current block, but one page of headroom keeps the rule local.)"""
+        return self.free_pages >= self.blocks_for(prompt_tokens) + 1
+
+    # ---------------------------------------------------------- transitions
+    def map_block(self, row: int, block: int) -> int:
+        """Map ``row``'s logical ``block`` to a fresh physical page."""
+        if self.table[row, block] != 0:
+            return int(self.table[row, block])
+        if not self.free:
+            raise RuntimeError(
+                f"paged KV cache exhausted: 0 of {self.num_pages - 1} data "
+                f"pages free while mapping block {block} of row {row}. "
+                f"Size CacheConfig.num_pages to the peak live-token count "
+                f"(~batch * (prompt + budget) / page_size), or lower the "
+                f"batch size."
+            )
+        page = self.free.pop()
+        if page in self._ever_used:
+            self.pages_reused += 1
+        self._ever_used.add(page)
+        self.table[row, block] = page
+        self._owned[row].append(page)
+        self.peak_pages_in_use = max(self.peak_pages_in_use, self.pages_in_use)
+        self.dirty = True
+        return page
+
+    def ensure(self, row: int, start_slot: int, end_slot: int) -> None:
+        """Map every block covering logical slots [start_slot, end_slot]
+        for ``row`` — called before each chunk/rollout dispatch with the
+        slot range the device program may write."""
+        end_slot = min(end_slot, self.n_blocks * self.page_size - 1)
+        for block in range(start_slot // self.page_size,
+                           end_slot // self.page_size + 1):
+            self.map_block(row, block)
+
+    def admit_row(self, row: int, prompt_slots: int, cur: int) -> np.ndarray:
+        """Fresh mapping for an admitted request: its prompt blocks
+        [0, ceil(prompt_slots/ps)) plus the batch's current decode block.
+        Returns the (n_blocks,) row table (the ``admit`` program's input).
+        The row must have been freed (``free_row``) first."""
+        if self._owned[row]:
+            raise RuntimeError(f"row {row} still owns pages — free_row() "
+                               f"before re-admitting")
+        self.ensure(row, 0, max(prompt_slots - 1, 0))
+        self.map_block(row, min(cur // self.page_size, self.n_blocks - 1))
+        return self.table[row].copy()
+
+    def free_row(self, row: int) -> int:
+        """Return all of ``row``'s pages to the free list (harvest time)
+        and unmap the row.  Returns the number of pages freed."""
+        pages = self._owned[row]
+        n = len(pages)
+        self.free.extend(reversed(pages))
+        self._owned[row] = []
+        self.table[row] = 0
+        if n:
+            self.dirty = True
+        return n
+
+    def snapshot(self) -> np.ndarray:
+        """The table to push to the device; marks the allocator clean.
+        MUST be followed by an actual device update (the engine's
+        ``put_page_table``) — skipping it would leave a freed row's stale
+        mapping live on device, aliasing reused pages."""
+        self.dirty = False
+        return self.table

@@ -206,11 +206,12 @@ def serve_state_pspecs(cfg: ModelConfig, ctx: ShardCtx, state):
     """PartitionSpec pytree for a ``serving.executor.ServeState``.
 
     The cache follows ``serving.cache.cache_pspecs`` (kv-heads / capacity /
-    SSD-heads on the model axis); every other field is a per-slot array with
-    a leading batch dim that rides the data axis (when divisible — B=1
-    admission states stay replicated); the rng key is replicated.  This is
-    the spec the executor feeds to ``jax.jit`` in/out shardings for its
-    decode-chunk / admit / per-token programs.
+    SSD-heads on the model axis; paged caches shard the page POOLS over the
+    model axis and replicate the page table); every other field is a
+    per-slot array with a leading batch dim that rides the data axis (when
+    divisible — B=1 admission states stay replicated); the rng key is
+    replicated.  This is the spec the executor feeds to ``jax.jit`` in/out
+    shardings for its decode-chunk / admit / per-token programs.
     """
     # lazy: serving.cache imports ShardCtx from this module
     from repro.serving.cache import cache_pspecs

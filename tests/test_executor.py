@@ -99,7 +99,7 @@ def test_rollout_does_not_donate_cache(eng_and_state):
     eng, st = eng_and_state
     toks, _ = eng.force_answer(st, 4, greedy=True)     # builds the program
     B = int(st.active.shape[0])
-    prog = eng.executor._programs[("rollout", B, 4, True)]
+    prog = eng.executor._programs[("rollout", B, 4, True, "ring")]
     compiled = prog.lower(eng.params, st.cache, st.next_pos, st.last_token,
                           st.rng).compile()
     assert compiled.memory_analysis().alias_size_in_bytes < cache_bytes(st.cache)

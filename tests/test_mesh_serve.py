@@ -1,9 +1,11 @@
 """Mesh equivalence: ``serve()``/``reason()`` on a 4x2 (data x model) mesh
 of 8 simulated host devices must produce token-for-token identical outputs,
 exit steps, and EAT trajectories to single-device serving on the tiny
-config.  Real multi-shard semantics need >1 device, so the meat runs in a
-subprocess with 8 forced host devices (tests keep 1 device, like
-``test_sharded_attention``)."""
+config — through BOTH cache backends: the dense ring and the block-paged
+pool (the paged mesh run is compared against the single-device RING run, so
+one assertion pins backend x mesh equivalence at once).  Real multi-shard
+semantics need >1 device, so the meat runs in a subprocess with 8 forced
+host devices (tests keep 1 device, like ``test_sharded_attention``)."""
 import os
 import subprocess
 import sys
@@ -19,12 +21,13 @@ from repro.core.stopping import EATStopper
 from repro.data.synthetic import ChainTask, Tokens
 from repro.launch.mesh import local_ctx, make_device_ctx
 from repro.models import Model
+from repro.serving.cache import CacheConfig
 from repro.serving.engine import EngineConfig, ReasoningEngine
 from repro.serving.sampler import SamplerConfig
 
 assert len(jax.devices()) == 8, jax.devices()
 
-def build(ctx, delta):
+def build(ctx, delta, cache_kind="ring"):
     cfg = get_config("tiny")
     model = Model(cfg, ctx, attn_impl="xla")
     params = model.init(jax.random.PRNGKey(11))   # same key => same weights
@@ -33,6 +36,7 @@ def build(ctx, delta):
         pad_id=Tokens.PAD, end_think_id=Tokens.END_THINK,
         newline_id=Tokens.NEWLINE, eos_id=Tokens.EOS, chunk_len=8,
         sampler=SamplerConfig(greedy=True),
+        cache=CacheConfig(kind=cache_kind, page_size=16),
     )
     monitor = ReasoningMonitor(
         stopper=EATStopper(alpha=0.2, delta=delta),
@@ -44,29 +48,36 @@ def build(ctx, delta):
 task = ChainTask()
 b = task.serve_batch(np.random.default_rng(7), 6)
 
-# ---- serve(): continuous batching, early exit at the first EAT eval
+# ---- serve(): continuous batching, early exit at the first EAT eval; the
+# single-device ring run is the one reference every (mesh, cache) variant
+# must reproduce token-for-token
 for delta in (1e9, 0.0):      # exit-at-first-eval AND run-to-budget regimes
     ref_eng = build(local_ctx(), delta)
     ref = ref_eng.serve(b["prompts"], b["prompt_len"], jax.random.PRNGKey(0),
                         batch_size=4, max_tokens=24, answer_len=4,
                         record_trace=True)
-    mesh_eng = build(make_device_ctx(4, 2), delta)
-    out = mesh_eng.serve(b["prompts"], b["prompt_len"], jax.random.PRNGKey(0),
-                         batch_size=4, max_tokens=24, answer_len=4,
-                         record_trace=True)
-    for r, o in zip(ref, out):
-        assert r["n_reasoning"] == o["n_reasoning"], (delta, r, o)
-        assert r["exit_reason"] == o["exit_reason"], (delta, r, o)
-        assert r["ended_think"] == o["ended_think"], (delta, r, o)
-        np.testing.assert_array_equal(r["reasoning_tokens"],
-                                      o["reasoning_tokens"])
-        np.testing.assert_array_equal(r["answer_tokens"], o["answer_tokens"])
-        # EAT trajectory: same evaluation schedule, same EMA variance values
-        assert len(r["eat_trace"]) == len(o["eat_trace"]), (delta, r, o)
-        for (n1, e1, v1), (n2, e2, v2) in zip(r["eat_trace"], o["eat_trace"]):
-            assert (n1, e1) == (n2, e2)
-            np.testing.assert_allclose(v1, v2, atol=1e-5)
-    print(f"serve delta={delta} equivalent over {len(ref)} requests")
+    for kind in ("ring", "paged"):
+        mesh_eng = build(make_device_ctx(4, 2), delta, cache_kind=kind)
+        out = mesh_eng.serve(b["prompts"], b["prompt_len"],
+                             jax.random.PRNGKey(0),
+                             batch_size=4, max_tokens=24, answer_len=4,
+                             record_trace=True)
+        for r, o in zip(ref, out):
+            assert r["n_reasoning"] == o["n_reasoning"], (delta, kind, r, o)
+            assert r["exit_reason"] == o["exit_reason"], (delta, kind, r, o)
+            assert r["ended_think"] == o["ended_think"], (delta, kind, r, o)
+            np.testing.assert_array_equal(r["reasoning_tokens"],
+                                          o["reasoning_tokens"])
+            np.testing.assert_array_equal(r["answer_tokens"],
+                                          o["answer_tokens"])
+            # EAT trajectory: same schedule, same EMA variance values
+            assert len(r["eat_trace"]) == len(o["eat_trace"]), (delta, kind)
+            for (n1, e1, v1), (n2, e2, v2) in zip(r["eat_trace"],
+                                                  o["eat_trace"]):
+                assert (n1, e1) == (n2, e2)
+                np.testing.assert_allclose(v1, v2, atol=1e-5)
+        print(f"serve delta={delta} cache={kind} equivalent "
+              f"over {len(ref)} requests")
 
 # ---- reason(): one batch, monitored, compare exit latches + EAT values
 ref_eng = build(local_ctx(), 1e9)

@@ -1,0 +1,64 @@
+#!/usr/bin/env python
+"""Fail on broken relative links in README.md and docs/*.md.
+
+Checks every markdown inline link ``[text](target)``:
+  * http(s)/mailto targets are skipped (no network in CI);
+  * pure-anchor targets (``#section``) are skipped;
+  * everything else must resolve to an existing file or directory
+    relative to the file containing the link (any ``#anchor`` suffix is
+    stripped first).
+
+Run:  python tools/check_docs_links.py   (exit 1 + listing on failure)
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def doc_files() -> list[Path]:
+    files = [REPO / "README.md"]
+    files += sorted((REPO / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check(path: Path) -> list[str]:
+    errors = []
+    text = path.read_text(encoding="utf-8")
+    for lineno, line in enumerate(text.splitlines(), 1):
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = (path.parent / rel).resolve()
+            if not resolved.exists():
+                errors.append(f"{path.relative_to(REPO)}:{lineno}: "
+                              f"broken link -> {target}")
+    return errors
+
+
+def main() -> int:
+    files = doc_files()
+    if not files:
+        print("no docs found to check", file=sys.stderr)
+        return 1
+    errors = [e for f in files for e in check(f)]
+    for e in errors:
+        print(e, file=sys.stderr)
+    n_links = sum(len(LINK_RE.findall(f.read_text(encoding="utf-8")))
+                  for f in files)
+    print(f"checked {len(files)} files / {n_links} links: "
+          f"{len(errors)} broken")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
