@@ -25,10 +25,21 @@ reclaims an exiting request's pages mid-batch, and admits the whole queue.
 ``both`` emits ``artifacts/BENCH_paged_cache.json`` (requests-served and
 tok/s per backend — docs/serving.md §Choosing a cache backend).
 
+``--monitor proxy`` runs the self-EAT vs black-box proxy-EAT serving A/B
+(docs/serving.md §Black-box monitoring) on a mixed-exit greedy workload
+(delta auto-calibrated to the median first-evaluation variance, so part of
+the queue exits via EAT and part runs to budget).  A same-params proxy
+pins tokens-saved parity with self-EAT (per-request exit steps within ±1 —
+bit-equal in practice) and the generator-side probe-program count (0, the
+black-box contract); the probe-FLOPs ratio of a genuinely small proxy
+(``--proxy-arch``, default tiny-proxy) vs the generator quantifies the
+monitoring discount.  Emits ``artifacts/BENCH_proxy_serve.json``.
+
 Run:  PYTHONPATH=src python benchmarks/engine_throughput.py
       [--batch 8] [--budget 96] [--chunks 1 8 32] [--out artifacts/...json]
       [--scaling] [--devices-list 1 2 4 8]
       [--cache both] [--requests 32] [--page-size 16]
+      [--monitor proxy] [--proxy-arch tiny-proxy]
 """
 import argparse
 import json
@@ -213,6 +224,134 @@ def run_cache_bench(args) -> dict:
     return rec
 
 
+def run_proxy_bench(args) -> dict:
+    """Self-EAT vs black-box proxy-EAT serving A/B on one mixed-exit greedy
+    workload (paper Fig. 5 through the serving stack).
+
+    A same-params proxy must save the same tokens as self-EAT (the exit
+    decisions are bit-equal under greedy sampling — tests/test_proxy_serve
+    pins the exact equality; the artifact reports the ±1-step parity
+    check), while the generator executor builds zero probe programs.  The
+    probe-FLOPs ratio of the small ``--proxy-arch`` model vs the generator
+    is the black-box monitoring discount: what an EAT evaluation costs when
+    a cheap local model pays for it instead of the big one.
+    """
+    from repro.core.eat import eval_eat
+    from repro.serving.cache import alloc_cache
+    from repro.serving.proxy import ProxyConfig
+    from repro.serving.scheduler import SlotScheduler
+    from repro.utils.jax_compat import cost_analysis_dict
+
+    task = ChainTask()
+    B, budget = args.batch, args.budget
+    n_req = args.requests or 2 * B
+    batch = task.serve_batch(np.random.default_rng(0), n_req)
+    S = batch["prompts"].shape[1]
+    # one extra budget of ring slack: the proxy-mode generator decodes to
+    # the chunk boundary before a retract lands, so its ring pointer can
+    # outrun the self-EAT run by up to chunk_len per exit
+    capacity = SlotScheduler.required_capacity(S, n_req, B, budget) + budget
+
+    cfg = get_config("tiny")
+    model = Model(cfg, attn_impl="xla")
+    params = model.init(jax.random.PRNGKey(0))
+    probe = make_probe(Tokens.END_THINK, (Tokens.ANS,))
+
+    def make(delta, proxy=None):
+        ecfg = EngineConfig(
+            max_reasoning_tokens=budget, capacity=capacity,
+            pad_id=Tokens.PAD, end_think_id=Tokens.END_THINK,
+            newline_id=Tokens.NEWLINE, eos_id=Tokens.EOS, chunk_len=8,
+            sampler=SamplerConfig(greedy=True),
+        )
+        monitor = ReasoningMonitor(
+            stopper=EATStopper(alpha=0.2, delta=delta), probe=probe,
+            schedule="every_n", every_n=8, min_evals=1,
+        )
+        return ReasoningEngine(model, params, ecfg, monitor, proxy=proxy)
+
+    # calibrate delta to the median of each request's LOWEST EMA variance
+    # (a delta=0 dry run records the full trajectories): requests whose
+    # variance dips below it exit via EAT, the rest run to budget or end
+    # naturally — a genuinely mixed-exit workload, still greedy (=>
+    # deterministic, parity-comparable between monitor tiers)
+    cal = make(0.0).serve(batch["prompts"], batch["prompt_len"],
+                          jax.random.PRNGKey(100), batch_size=B,
+                          max_tokens=budget, record_trace=True)
+    min_vars = [min((v for (_, e, v) in r["eat_trace"] if e >= 1),
+                    default=None) for r in cal]
+    delta = float(np.median([v for v in min_vars if v is not None]))
+
+    def run(proxy):
+        engine = make(delta, proxy=proxy)
+        times = []
+        for rep in range(args.reps + 1):              # rep 0 = warmup
+            t0 = time.perf_counter()
+            results = engine.serve(batch["prompts"], batch["prompt_len"],
+                                   jax.random.PRNGKey(100), batch_size=B,
+                                   max_tokens=budget)
+            if rep:
+                times.append(time.perf_counter() - t0)
+        sec = float(np.median(times))
+        steps = [r["n_reasoning"] for r in results]
+        reasons = {}
+        for r in results:
+            reasons[r["exit_reason"]] = reasons.get(r["exit_reason"], 0) + 1
+        return engine, {
+            "seconds": sec, "tokens": int(sum(steps)),
+            "tokens_per_s": sum(steps) / sec,
+            "tokens_saved_vs_budget": int(n_req * budget - sum(steps)),
+            "exit_steps": steps, "exit_reasons": reasons,
+        }
+
+    eng_self, rec_self = run(None)
+    eng_proxy, rec_proxy = run(ProxyConfig(model=model, params=params))
+    step_deltas = [abs(a - b) for a, b in zip(rec_self["exit_steps"],
+                                              rec_proxy["exit_steps"])]
+    gen_probe_programs = len(
+        [k for k in eng_proxy.executor._programs
+         if k[0] == "probe" or (k[0] == "chunk" and k[2])])
+
+    def probe_flops(cfg_name):
+        c = get_config(cfg_name)
+        m = Model(c, attn_impl="xla")
+        p = m.init(jax.random.PRNGKey(0))
+        cache = alloc_cache(c, B, capacity)
+        fn = jax.jit(lambda pp, cc, np_: eval_eat(m, pp, cc, probe, np_))
+        comp = fn.lower(p, cache, jnp.zeros((B,), jnp.int32)).compile()
+        return float(cost_analysis_dict(comp).get("flops", 0.0))
+
+    f_self, f_small = probe_flops("tiny"), probe_flops(args.proxy_arch)
+    rec = {
+        "workload": "mixed_exit_proxy_serve", "batch": B, "budget": budget,
+        "requests": n_req, "delta": delta,
+        "self": rec_self, "proxy": rec_proxy,
+        "exit_step_max_delta": int(max(step_deltas, default=0)),
+        "tokens_saved_parity": max(step_deltas, default=0) <= 1,
+        "generator_probe_programs": gen_probe_programs,
+        "probe_flops": {"generator": f_self, "proxy_arch": args.proxy_arch,
+                        "proxy": f_small,
+                        "ratio": f_small / f_self if f_self else None},
+    }
+    for mode in ("self", "proxy"):
+        r = rec[mode]
+        print(f"{mode:>6s}: {r['tokens']:6d} tok "
+              f"(saved {r['tokens_saved_vs_budget']:5d} vs budget)  "
+              f"{r['tokens_per_s']:8.0f} tok/s  exits={r['exit_reasons']}",
+              flush=True)
+    ratio = rec["probe_flops"]["ratio"]
+    print(f"exit-step max delta: {rec['exit_step_max_delta']}  "
+          f"generator probe programs: {gen_probe_programs}  "
+          f"probe-FLOPs ratio ({args.proxy_arch}/tiny): "
+          + (f"{ratio:.3f}" if ratio is not None else "n/a"))
+    path = args.out or os.path.join(
+        os.path.dirname(__file__), "..", "artifacts",
+        "BENCH_proxy_serve.json")
+    write_json(path, rec)
+    print(f"wrote {os.path.normpath(path)}")
+    return rec
+
+
 def run_scaling_sweep(args) -> dict:
     """Fan the sweep out one subprocess per device count (the simulated
     device count is fixed at jax import) and collect
@@ -278,6 +417,12 @@ def main():
                     help="--cache workload queue length (0 = 4 * --batch)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="--cache paged backend page size (logical slots)")
+    ap.add_argument("--monitor", choices=["proxy"], default=None,
+                    help="run the self-EAT vs black-box proxy-EAT serve() "
+                         "A/B (writes artifacts/BENCH_proxy_serve.json)")
+    ap.add_argument("--proxy-arch", default="tiny-proxy",
+                    help="--monitor proxy: small-proxy architecture for the "
+                         "probe-FLOPs ratio")
     ap.add_argument("--serve-child", type=int, default=0,
                     help=argparse.SUPPRESS)   # internal: one sweep point
     args = ap.parse_args()
@@ -286,6 +431,11 @@ def main():
         # every path medians over the timed reps: zero reps would write
         # NaN seconds/tok/s into the artifact without erroring
         ap.error("--reps must be >= 1 (rep 0 is compile warmup)")
+    if args.monitor and (args.cache or args.scaling):
+        # each mode is its own A/B with its own artifact — running one
+        # silently while another flag is set hides the un-run benchmark
+        ap.error("--monitor proxy is a standalone A/B; drop "
+                 "--cache/--scaling (run them separately)")
 
     if args.serve_child:
         rec = run_serve_child(args.serve_child, args.batch, args.budget,
@@ -296,6 +446,8 @@ def main():
         return run_scaling_sweep(args)
     if args.cache:
         return run_cache_bench(args)
+    if args.monitor == "proxy":
+        return run_proxy_bench(args)
 
     engine = build_engine(args.budget)
     batch = ChainTask().serve_batch(np.random.default_rng(0), args.batch)

@@ -17,6 +17,26 @@ TINY = register(
     )
 )
 
+# the black-box monitor model for the proxy-EAT serving tier (paper Fig. 5
+# at toy scale: a much smaller same-tokenizer model whose probe FLOPs are a
+# fraction of the generator's — benchmarks/engine_throughput.py --monitor
+# proxy reports the ratio)
+TINY_PROXY = register(
+    ModelConfig(
+        name="tiny-proxy",
+        arch_type="dense",
+        n_layers=1,
+        d_model=32,
+        n_heads=2,
+        n_kv_heads=1,
+        head_dim=16,
+        d_ff=64,
+        vocab=64,                # must match the generator's tokenizer
+        qk_norm=True,
+        dtype="float32",
+    )
+)
+
 # the trained synthetic reasoning model used by examples/train_reasoner.py
 TINY_REASONER = register(
     ModelConfig(

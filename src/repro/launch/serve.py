@@ -60,7 +60,30 @@ def main():
     ap.add_argument("--num-pages", type=int, default=0,
                     help="paged backend: physical page-pool size "
                          "(0 = ring-equivalent auto sizing)")
+    ap.add_argument("--monitor", choices=["self", "proxy"], default="self",
+                    help="EAT monitor tier: self (white-box, probe inlined "
+                         "in the decode chunk) or proxy (black-box, a "
+                         "second model shadows the emitted stream — "
+                         "docs/serving.md §Black-box monitoring)")
+    ap.add_argument("--proxy-config", default=None, metavar="ARCH",
+                    help="monitor=proxy: proxy model architecture "
+                         "(default: --arch, i.e. a same-family twin)")
+    ap.add_argument("--proxy-ckpt", default=None,
+                    help="monitor=proxy: proxy checkpoint (default: random "
+                         "weights, seeded differently from the generator)")
+    ap.add_argument("--proxy-mesh", default=None, metavar="DATAxMODEL",
+                    help="monitor=proxy: give the proxy its own (smaller) "
+                         "mesh over the visible devices, e.g. 1x2 "
+                         "(default: share the generator's context)")
     args = ap.parse_args()
+
+    if args.monitor == "proxy" and not args.requests:
+        ap.error("--monitor proxy serves through the scheduler: pass "
+                 "--requests N")
+    if args.monitor != "proxy" and (args.proxy_config or args.proxy_ckpt
+                                    or args.proxy_mesh):
+        ap.error("--proxy-config/--proxy-ckpt/--proxy-mesh only apply with "
+                 "--monitor proxy (default monitor is 'self')")
 
     cfg = get_config(args.arch)
     if args.mesh:
@@ -91,7 +114,32 @@ def main():
         newline_id=Tokens.NEWLINE,
     )
     ecfg.chunk_len = args.chunk
-    engine = ReasoningEngine(model, params, ecfg, monitor)
+
+    proxy = None
+    if args.monitor == "proxy":
+        from repro.serving.proxy import ProxyConfig
+
+        proxy_cfg = get_config(args.proxy_config or args.arch)
+        if proxy_cfg.vocab != cfg.vocab:
+            raise SystemExit(f"proxy arch {proxy_cfg.name} must share the "
+                             f"generator's tokenizer (vocab {cfg.vocab}, "
+                             f"got {proxy_cfg.vocab})")
+        if args.proxy_mesh:
+            d, m = (int(x) for x in args.proxy_mesh.lower().split("x"))
+            proxy_ctx = make_device_ctx(d, m)
+        else:
+            proxy_ctx = ctx
+        proxy_model = Model(proxy_cfg, proxy_ctx, attn_impl="xla")
+        if args.proxy_ckpt:
+            like = jax.eval_shape(
+                lambda: proxy_model.init(jax.random.PRNGKey(0)))
+            proxy_params = load_checkpoint(args.proxy_ckpt, like)
+        else:
+            print("WARNING: no proxy checkpoint — random proxy weights")
+            proxy_params = proxy_model.init(jax.random.PRNGKey(1))
+        proxy = ProxyConfig(model=proxy_model, params=proxy_params)
+
+    engine = ReasoningEngine(model, params, ecfg, monitor, proxy=proxy)
 
     task = ChainTask()
     if args.requests:
@@ -116,7 +164,8 @@ def main():
         ans = np.array([ChainTask.extract_answer(r["answer_tokens"][None])[0]
                         for r in results])
         n = np.array([r["n_reasoning"] for r in results])
-        print(f"served {args.requests} requests through {args.batch} slots")
+        print(f"served {args.requests} requests through {args.batch} slots "
+              f"(monitor={engine.monitor_mode})")
         print(f"answers: {ans}  truth: {batch['answers']}")
         print(f"correct: {(ans == batch['answers']).mean():.2f}  "
               f"reasoning tokens: total={n.sum()} per-q={n}")

@@ -53,12 +53,23 @@ from repro.serving.cache import (
     alloc_paged_cache,
     page_align,
 )
-from repro.serving.executor import Executor, ServeState, positions_for
+from repro.serving.executor import (
+    Executor,
+    ProxyExecutor,
+    ServeState,
+    positions_for,
+)
+from repro.serving.proxy import ProxyConfig, ProxyTier
 from repro.serving.request import Request
 from repro.serving.sampler import SamplerConfig, sample
-from repro.serving.scheduler import PageAllocator, SlotScheduler
+from repro.serving.scheduler import (
+    PageAllocator,
+    SlotScheduler,
+    pools_can_admit,
+)
 
-__all__ = ["CacheConfig", "EngineConfig", "ReasoningEngine", "ServeState"]
+__all__ = ["CacheConfig", "EngineConfig", "ProxyConfig", "ReasoningEngine",
+           "ServeState"]
 
 
 @dataclasses.dataclass
@@ -78,10 +89,23 @@ class EngineConfig:
 
 
 class ReasoningEngine:
-    """White-box engine: the reasoning model is also the EAT monitor model."""
+    """The serving facade, in one of two monitor modes:
+
+    * ``monitor="self"`` (default): white-box — the reasoning model is also
+      the EAT monitor model; the probe runs inline in the decode chunk.
+    * ``monitor="proxy"`` (``proxy=ProxyConfig(...)``): black-box — the
+      generator decodes whole chunks with NO inline probe (its executor
+      never builds a probe program; no generator logits feed the exit
+      decision), and a second model shadows the emitted chunks through a
+      ``ProxyExecutor``, supplying ``eat_trace``/``exit_step`` through the
+      executor's ``retract`` program.  Same-params proxies reproduce
+      self-EAT serving bit-for-bit under greedy sampling
+      (tests/test_proxy_serve.py).
+    """
 
     def __init__(self, model: Model, params, ecfg: EngineConfig,
-                 monitor: ReasoningMonitor | None = None):
+                 monitor: ReasoningMonitor | None = None,
+                 proxy: ProxyConfig | None = None):
         from repro.core.stopping import EATStopper
 
         self.model = model
@@ -97,6 +121,31 @@ class ReasoningEngine:
         # place params on the mesh once so per-dispatch in_shardings never
         # re-transfer them (no-op on single device)
         self.params = self.executor.shard_params(params)
+        self.proxy = proxy
+        self.proxy_executor = None
+        self.proxy_params = None
+        if proxy is not None:
+            if model.cfg.arch_type in ("ssm", "hybrid"):
+                raise ValueError(
+                    "monitor='proxy' needs a slot-addressed generator cache "
+                    "to retract overshoot tokens; SSM/hybrid recurrences "
+                    "cannot be rewound to the proxy's exit step."
+                )
+            self.proxy_executor = ProxyExecutor(proxy.model, proxy.params,
+                                                ecfg, monitor)
+            self.proxy_params = self.proxy_executor.shard_params(proxy.params)
+
+    @property
+    def monitor_mode(self) -> str:
+        return "proxy" if self.proxy is not None else "self"
+
+    def _across_tiers(self, tree):
+        """Ferry per-row scalars between the generator's and the proxy's
+        meshes (a host hop of a few KB, both directions; identity when the
+        tiers share a ctx — the common case)."""
+        if self.proxy_executor.ctx.mesh is self.executor.ctx.mesh:
+            return tree
+        return jax.tree_util.tree_map(np.asarray, tree)
 
     def _positions(self, pos1d):
         return positions_for(self.model.cfg, pos1d)
@@ -163,6 +212,13 @@ class ReasoningEngine:
         jitted ``decode_chunk`` dispatch advancing up to ``chunk_len``
         tokens; the only host sync is the per-chunk ``active.any()``.
         CONSUMES ``state`` (the chunk program donates its buffers)."""
+        if use_monitor and self.proxy is not None:
+            raise ValueError(
+                "monitor='proxy' runs through serve() (the proxy tier must "
+                "prefill the prompts the scheduler admits — a bare "
+                "ServeState does not carry them); use serve(), or pass "
+                "use_monitor=False for an unmonitored reason()."
+            )
         budget = jnp.asarray(max_tokens or self.ecfg.max_reasoning_tokens,
                              jnp.int32)
         # chunk_len <= 0 would make the device loop a no-op and spin the
@@ -236,6 +292,16 @@ class ReasoningEngine:
         + probe) / page_size pages) can still exhaust mid-decode, which
         fails fast with a sizing hint rather than corrupting neighbours.
 
+        In ``monitor="proxy"`` mode the same loop runs black-box: the
+        generator chunk decodes unmonitored, the proxy tier shadows the
+        emitted tokens (its own prefills/pages in lock-step with the
+        scheduler), and the executor's ``retract`` reconciles each chunk —
+        rewinding rows the proxy stopped mid-chunk and syncing the proxy's
+        monitor state so harvest, traces, and exit reasons read identically
+        to self-EAT.  Admissions gate on BOTH page pools
+        (``scheduler.pools_can_admit``): an exhausted proxy pool defers
+        admission independently of the generator pool.
+
         Returns one dict per request (in request order): the pre-refactor
         keys (``reasoning_tokens``, ``n_reasoning``, ``ended_think``, and —
         when ``answer_len`` > 0 — the greedy forced-answer
@@ -269,6 +335,7 @@ class ReasoningEngine:
         ccfg = self.ecfg.cache
         paged = ccfg.kind == "paged"
         alloc = None
+        probe_m = len(self.monitor.probe)
         if paged:
             ps = ccfg.page_size
             C_log = page_align(self.ecfg.capacity, ps)
@@ -276,7 +343,20 @@ class ReasoningEngine:
             num_pages = ccfg.num_pages or (B * n_blocks + 1)
             alloc = PageAllocator(num_pages, ps, n_blocks, B)
             C_pre = page_align(S, ps)      # prompt-sized prefill capacity
-            probe_m = len(self.monitor.probe)
+
+        # ---- proxy tier (monitor="proxy"): the generator chunk runs with
+        # its inline monitor OFF — the black-box contract — and the proxy
+        # shadows each chunk, feeding exits back through retract
+        proxy_mode = use_monitor and self.proxy is not None
+        ptier = None
+        self._ptier = None       # kept for post-serve stats (tests/benches)
+        if proxy_mode:
+            ptier = self._ptier = ProxyTier(
+                self.proxy_executor, self.proxy_params, self.ecfg,
+                self.monitor, self.proxy.cache or ccfg,
+                self.proxy.capacity or self.ecfg.capacity, budget,
+            )
+        gen_monitor = use_monitor and not proxy_mode
 
         cohort = sched.start_batch()
         rng, sub = jax.random.split(rng)
@@ -290,31 +370,26 @@ class ReasoningEngine:
                                          num_pages)
             state = state._replace(cache=self.executor.pack_paged(
                 template, state.cache, alloc.table))
+        if ptier is not None:
+            ptier.start_batch(prompts_np[:B], plen_np[:B],
+                              [req.slot for req in cohort])
         for req in cohort:
             req.begin_decode()
         sched.check_capacity(int(state.cache["cur"]), "the initial batch")
+        if ptier is not None:
+            ptier.check_capacity("the initial batch")
+
+        # the generator only pays a probe tail when IT runs the probe; in
+        # proxy mode that tail belongs to the proxy tier's pool
+        gen_tail = 0 if proxy_mode else probe_m
 
         def ensure_pages(span: int, *, clamp_to_budget: bool = False):
-            """Map (and push) pages covering the next ``span`` logical
-            slots for every occupied slot before a writing dispatch.  With
-            ``clamp_to_budget`` the span is cut per row to the tokens it
-            can still emit plus the probe tail (a row never decodes past
-            its budget, so pages past it would be reserved-but-never-
-            written — enough waste to break the documented pool sizing
-            rule when chunk_len exceeds the remaining budget).  The table
-            upload is skipped while the mapping is unchanged (steady
-            decode inside a block)."""
-            cur0 = int(state.cache["cur"])
-            n_r = np.asarray(state.n_reasoning) if clamp_to_budget else None
-            for s, _ in sched.bound():
-                sp = span
-                if n_r is not None:
-                    left = max(1, budget - int(n_r[s]))
-                    sp = min(span, left + probe_m)
-                alloc.ensure(s, cur0, cur0 + sp)
-            if not alloc.dirty:
-                return state
-            return self.executor.put_page_table(state, alloc.snapshot())
+            """Occupied-slot pages for the next generator dispatch — the
+            shared sizing rule lives in ``Executor.ensure_chunk_pages``."""
+            return self.executor.ensure_chunk_pages(
+                alloc, state, [s for s, _ in sched.bound()], span,
+                tail=gen_tail, budget=budget if clamp_to_budget else None,
+            )
 
         while sched.running:
             if bool(state.active.any()):
@@ -322,12 +397,29 @@ class ReasoningEngine:
                     # a chunk writes <= chunk_len decode tokens (fewer for
                     # rows near their budget), each probe another
                     # len(probe) slots past the decode slot
-                    state = ensure_pages(chunk_py + probe_m,
+                    state = ensure_pages(chunk_py + gen_tail,
                                          clamp_to_budget=True)
+                # host copy BEFORE the dispatch: the chunk donates ``state``
+                n_start = np.asarray(state.out_len) if proxy_mode else None
                 state = self.executor.decode_chunk(
                     self.params, state, budget_dev, chunk,
-                    use_monitor=use_monitor,
+                    use_monitor=gen_monitor,
                 )
+                if proxy_mode:
+                    # shadow the chunk through the proxy, then reconcile:
+                    # rewind overshoot rows to the proxy's exit step and
+                    # sync its monitor into the state (executor.retract)
+                    n_emitted = np.asarray(state.out_len) - n_start
+                    ptier.begin_chunk(chunk_py,
+                                      [s for s, _ in sched.bound()])
+                    new_n, pmon = ptier.observe(
+                        self._across_tiers(state.out_tokens), n_start,
+                        n_emitted, chunk_py,
+                    )
+                    state = self.executor.retract(
+                        state, self._across_tiers(new_n),
+                        self._across_tiers(pmon),
+                    )
             active_np = np.asarray(state.active)
             if record_trace:
                 n_np = np.asarray(state.n_reasoning)
@@ -367,6 +459,10 @@ class ReasoningEngine:
                     # reclaim the moment a request exits: these pages back
                     # the admissions below, in the same batch
                     alloc.free_row(s)
+                if ptier is not None:
+                    # the proxy's shadow pages are reclaimed in the same
+                    # breath — a proxy-driven exit frees BOTH pools
+                    ptier.free_row(s)
             # admission sweeps EVERY free slot, not just this round's
             # harvested ones: a paged admission deferred earlier (pool
             # momentarily full) left its slot empty, and the pages freed
@@ -384,7 +480,17 @@ class ReasoningEngine:
                 # request stays queued until an exit frees enough pages.
                 sched.check_capacity(int(state.cache["cur"]),
                                      "another admission")
-                if paged and not alloc.can_admit(S):
+                if ptier is not None:
+                    ptier.check_capacity("another admission")
+                # both pools must cover the prompt (all-or-nothing): an
+                # exhausted proxy pool defers the admission exactly like an
+                # exhausted generator pool — the request stays queued until
+                # a harvest frees pages in whichever pool is short
+                if not pools_can_admit(S, alloc,
+                                       ptier.alloc if ptier else None):
+                    for a in (alloc, ptier.alloc if ptier else None):
+                        if a is not None and not a.can_admit(S):
+                            a.deferrals += 1
                     continue
                 nxt = sched.admit_next(s)
                 rng, sub = jax.random.split(rng)
@@ -398,14 +504,33 @@ class ReasoningEngine:
                                                       row_table)
                 else:
                     state = self._admit(state, one, s)
+                if ptier is not None:
+                    ptier.admit(s, nxt.prompt, nxt.prompt_len, S)
                 nxt.begin_decode()
-            if paged and sched.pending and not sched.running:
-                raise RuntimeError(
-                    f"paged KV cache cannot hold a single request: "
-                    f"{alloc.free_pages} pages free with every slot empty, "
-                    f"but a prompt needs {alloc.blocks_for(S) + 1} pages. "
-                    f"Raise CacheConfig.num_pages."
-                )
+            if sched.pending and not sched.running:
+                # every slot is empty yet the queue cannot drain — name the
+                # pool that is actually too small to hold one request
+                if paged and not alloc.can_admit(S):
+                    raise RuntimeError(
+                        f"paged KV cache cannot hold a single request: "
+                        f"{alloc.free_pages} pages free with every slot "
+                        f"empty, but a prompt needs "
+                        f"{alloc.blocks_for(S) + 1} pages. "
+                        f"Raise CacheConfig.num_pages."
+                    )
+                if ptier is not None and not ptier.can_admit(S):
+                    raise RuntimeError(
+                        f"proxy paged KV cache cannot hold a single "
+                        f"request: {ptier.alloc.free_pages} pages free with "
+                        f"every slot empty, but a prompt needs "
+                        f"{ptier.alloc.blocks_for(S) + 1} pages. "
+                        f"Raise ProxyConfig.cache.num_pages."
+                    )
+        if ptier is not None:
+            # drop the proxy tier's device buffers (its KV cache/pool is
+            # the tier's largest allocation); the host-side allocator
+            # stats stay readable via ``_ptier`` for tests and benches
+            ptier.state = None
         return [r.to_result() for r in requests]
 
     # ------------------------------------------------------------- answers

@@ -30,6 +30,16 @@ exists in the tree) and builds every program the engine dispatches:
   rollout        forced answer generation        (NOT donated: callers keep
                                                   decoding from / re-rolling
                                                   the same live cache)
+  retract        proxy-mode chunk reconciliation (ServeState DONATED)
+
+The black-box (``monitor="proxy"``) tier adds a second program store:
+``ProxyExecutor`` drives a *different* model that shadows the generator's
+emitted token chunks (``observe_chunk`` — forced-input decode + the same
+probe/monitor transition the self-EAT step runs) and owns its own KV cache,
+page pool, and mesh context.  In proxy mode the generator executor builds
+NO probe program and no monitored chunk — the black-box contract: no
+generator logits feed the exit decision (audited by key inspection on
+``_programs`` in tests/test_proxy_serve.py).
 
 Programs are built once per ``(batch, variant)`` and cached.  With a mesh
 in ``model.ctx`` (threaded from ``launch.mesh``) every program is jitted
@@ -54,6 +64,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.eat import ProbeSpec, eval_eat
@@ -68,7 +79,11 @@ from repro.serving.cache import (
     pack_paged_cache,
 )
 from repro.serving.sampler import SamplerConfig, logprob_of, sample
-from repro.sharding.partition import param_pspecs, serve_state_pspecs
+from repro.sharding.partition import (
+    param_pspecs,
+    proxy_stream_pspecs,
+    serve_state_pspecs,
+)
 
 
 def cache_kind(cache: dict) -> str:
@@ -197,6 +212,39 @@ def make_eat_step(
         eat_fn = lambda: eval_eat(model, params, cache, monitor.probe, next_pos)  # noqa: E731
         mon = monitor.observe(mon, eat_fn, nxt, active, lazy=probe_cond)
         return nxt, cache, mon, mon.stop_flag, rng
+
+    return step
+
+
+def make_shadow_step(model: Model, monitor: ReasoningMonitor):
+    """Build the proxy-side forced-token EAT step
+    ``step(params, cache, tok_in, tok_out, next_pos, mon, valid)``
+    -> ``(cache, mon, next_pos)``.
+
+    The mirror of ``make_eat_step`` for a model that does not choose the
+    tokens: ``tok_in`` (B,1) is the token the GENERATOR fed at this step
+    (committed into the proxy cache), ``tok_out`` (B,) the token the
+    generator emitted (the monitor's due-check input), ``valid`` (B,) the
+    mask of rows still consuming the stream.  Invalid rows write at
+    position -1 (masked) and their monitor state freezes — exactly the
+    inactive-row handling of the self-EAT step, so a proxy running the
+    generator's own params reproduces the self-EAT EMA trajectory
+    bit-for-bit (tests/test_proxy_serve.py).
+    """
+    cfg = model.cfg
+
+    def step(params, cache, tok_in, tok_out, next_pos, mon: MonitorState,
+             valid):
+        pos1d = jnp.where(valid, next_pos, -1)[:, None]
+        _, new_cache = model.decode_step(
+            params, tok_in, positions_for(cfg, pos1d), pos1d, cache
+        )
+        if cfg.arch_type in ("ssm", "hybrid"):
+            new_cache = freeze_inactive_rows(new_cache, cache, valid)
+        new_pos = next_pos + valid.astype(jnp.int32)
+        eat_fn = lambda: eval_eat(model, params, new_cache, monitor.probe, new_pos)  # noqa: E731
+        mon = monitor.observe(mon, eat_fn, tok_out, valid, lazy=True)
+        return new_cache, mon, new_pos
 
     return step
 
@@ -578,6 +626,104 @@ class Executor:
         cache["page_table"] = dev
         return state._replace(cache=cache)
 
+    def ensure_chunk_pages(self, alloc, state: ServeState, slots, span: int,
+                           *, tail: int = 0, budget: int | None = None
+                           ) -> ServeState:
+        """Map (and push) pages covering the next ``span`` logical slots
+        for every slot in ``slots`` before a writing dispatch — THE page-
+        sizing rule for a chunk, shared by the generator loop and the
+        proxy tier's shadow decode.  With ``budget`` the span is clamped
+        per row to the tokens it can still emit plus the probe ``tail``
+        (a row never decodes past its budget, so pages past it would be
+        reserved-but-never-written — enough waste to break the documented
+        pool sizing rule when the chunk exceeds the remaining budget).
+        The table upload is skipped while the mapping is unchanged
+        (steady decode inside a block)."""
+        cur0 = int(state.cache["cur"])
+        n_r = np.asarray(state.n_reasoning) if budget is not None else None
+        for s in slots:
+            sp = span
+            if n_r is not None:
+                left = max(1, budget - int(n_r[s]))
+                sp = min(span, left + tail)
+            alloc.ensure(s, cur0, cur0 + sp)
+        if not alloc.dirty:
+            return state
+        return self.put_page_table(state, alloc.snapshot())
+
+    def retract(self, state: ServeState, new_n, pmon: MonitorState
+                ) -> ServeState:
+        """Proxy-mode chunk-boundary reconciliation: rewind every row to the
+        proxy's exit decision and sync the proxy monitor into the state.
+
+        In ``monitor="proxy"`` serving the generator decodes whole chunks
+        blind (no inline probe), so a row the proxy stopped at emitted-token
+        count ``new_n[b] < n_reasoning[b]`` has overshot: extra tokens in
+        ``out_tokens``, extra KV committed past the exit position.  This
+        program truncates the token buffer back to ``new_n``, rewinds
+        ``next_pos``/``n_reasoning``/``out_len``, position-masks the
+        overshoot KV (``pos >= new next_pos`` -> -1, slot-agnostic so it
+        works for ring AND paged caches — masked slots contribute exact
+        zeros to every later attention sum, the paged==ring invariant), and
+        re-derives ``ended_think`` over the kept tokens.  ``pmon`` (the
+        proxy's MonitorState) replaces the generator's inert monitor so
+        harvest/traces read the proxy's stop flags and EMA state.  A row
+        with no overshoot passes through unchanged.  DONATES ``state``.
+        """
+        key = ("retract", int(state.active.shape[0]),
+               cache_kind(state.cache))
+        if key not in self._programs:
+            ecfg = self.ecfg
+
+            def fn(state: ServeState, new_n, pmon: MonitorState) -> ServeState:
+                overshoot = state.n_reasoning - new_n
+                next_pos = state.next_pos - overshoot
+                cache = dict(state.cache)
+                cache["pos"] = jnp.where(
+                    cache["pos"] >= next_pos[:, None], -1, cache["pos"]
+                )
+                cols = jnp.arange(state.out_tokens.shape[1],
+                                  dtype=jnp.int32)[None]
+                keep = cols < new_n[:, None]
+                last = jnp.take_along_axis(
+                    state.out_tokens, (new_n - 1)[:, None], 1)[:, 0]
+                # re-derive the </think> latch over the KEPT tokens only: a
+                # natural end the generator hit past the proxy's stop point
+                # never happened in self-EAT terms
+                ended = (jnp.where(keep, state.out_tokens, -1)
+                         == ecfg.end_think_id).any(-1)
+                return ServeState(
+                    cache=cache,
+                    rng=state.rng,
+                    active=state.active & ~pmon.stop_flag,
+                    next_pos=next_pos,
+                    last_token=last,
+                    n_reasoning=new_n,
+                    monitor=pmon,
+                    ended_think=ended,
+                    out_tokens=jnp.where(keep, state.out_tokens, ecfg.pad_id),
+                    out_len=new_n,
+                )
+
+            if self.ctx.mesh is None:
+                jitted = jax.jit(fn, donate_argnums=0)
+            else:
+                ssh = self._state_sh(state)
+                b = self._batch_entry(int(state.active.shape[0]))
+                jitted = jax.jit(
+                    fn,
+                    in_shardings=(
+                        ssh,
+                        self._ns(P(b)),
+                        jax.tree_util.tree_map(lambda _: self._ns(P(b)),
+                                               state.monitor),
+                    ),
+                    out_shardings=ssh,
+                    donate_argnums=0,
+                )
+            self._programs[key] = jitted
+        return self._programs[key](state, jnp.asarray(new_n, jnp.int32), pmon)
+
     def rollout(self, params, cache, next_pos, last_token, rng, *, n: int,
                 greedy: bool = False):
         """Forced answer rollout: append </think> then generate n tokens.
@@ -631,3 +777,111 @@ class Executor:
                 ))
             self._programs[key] = jitted
         return self._programs[key](params, cache, next_pos, last_token, rng)
+
+
+# --------------------------------------------------------------------------
+# ProxyExecutor: the black-box monitor tier's program store
+# --------------------------------------------------------------------------
+
+class ProxyExecutor(Executor):
+    """Program store for the proxy (black-box monitor) model.
+
+    The proxy tier (paper §4.2, Fig. 5) is a SECOND model — own params, own
+    KV cache (ring or paged, own page pool), own mesh context — that shadows
+    the generator's emitted token chunks and computes EAT from *its* logits.
+    Its decode state is a regular ``ServeState`` (the ``rng`` /
+    ``last_token`` / ``out_tokens`` rows are inert bookkeeping), so every
+    structural program is inherited from ``Executor`` unchanged: ``prefill``
+    for prompts, ``admit`` / ``admit_paged`` for slot recycling in lock-step
+    with the generator's admissions, ``pack_paged`` / ``put_page_table`` for
+    the proxy's own page pool.  The one new program is ``observe_chunk`` —
+    the forced-input shadow decode.  The generator executor, by contrast,
+    never builds a probe or monitored-chunk program in proxy mode (the
+    black-box contract; audited in tests/test_proxy_serve.py).
+    """
+
+    def __init__(self, model: Model, params, ecfg,
+                 monitor: ReasoningMonitor):
+        super().__init__(model, params, ecfg, monitor)
+        self._shadow = make_shadow_step(model, monitor)
+
+    def observe_chunk(self, params, pstate: ServeState, gen_tokens,
+                      n_start, n_emitted, chunk_len) -> ServeState:
+        """Shadow one generator chunk through the proxy model.
+
+        ``gen_tokens`` (B, T) is the generator's ``out_tokens`` buffer after
+        the chunk; ``n_start`` (B,) the per-row emitted count before it and
+        ``n_emitted`` (B,) the tokens it added.  Step ``i`` re-feeds the
+        token the generator consumed (``gen_tokens[b, n_start+i-1]``) into
+        the proxy cache and due-checks the token it emitted
+        (``gen_tokens[b, n_start+i]``), replaying the self-EAT monitor
+        transition on the proxy's logits.  A row stops consuming the moment
+        its stop latches (``monitor.stop_flag``) — the proxy cache never
+        ingests overshoot tokens, so it stays aligned with the retracted
+        generator stream.  ``pstate.n_reasoning`` tracks the corrected
+        emitted count (the ``retract`` program's ``new_n``).  DONATES
+        ``pstate``.
+        """
+        B = int(pstate.active.shape[0])
+        T = int(gen_tokens.shape[1])
+        key = ("shadow", B, T, cache_kind(pstate.cache))
+        if key not in self._programs:
+            shadow = self._shadow
+
+            def fn(params, st: ServeState, toks, n_start, n_emitted,
+                   chunk_len) -> ServeState:
+                def valid_of(s, i):
+                    return (i < n_emitted) & ~s.monitor.stop_flag
+
+                def cond(carry):
+                    i, s = carry
+                    return (i < chunk_len) & valid_of(s, i).any()
+
+                def body(carry):
+                    i, s = carry
+                    valid = valid_of(s, i)
+                    tok_in = jnp.take_along_axis(
+                        toks, (n_start + i - 1)[:, None], 1)
+                    tok_out = jnp.take_along_axis(
+                        toks, (n_start + i)[:, None], 1)[:, 0]
+                    cache, mon, new_pos = shadow(
+                        params, s.cache, tok_in, tok_out, s.next_pos,
+                        s.monitor, valid,
+                    )
+                    inc = valid.astype(jnp.int32)
+                    s = s._replace(
+                        cache=cache,
+                        monitor=mon,
+                        next_pos=new_pos,
+                        last_token=jnp.where(valid, tok_out, s.last_token),
+                        n_reasoning=s.n_reasoning + inc,
+                        out_len=s.out_len + inc,
+                        active=valid & ~mon.stop_flag,
+                    )
+                    return i + 1, s
+
+                _, st = jax.lax.while_loop(
+                    cond, body, (jnp.zeros((), jnp.int32), st)
+                )
+                return st
+
+            if self.ctx.mesh is None:
+                jitted = jax.jit(fn, donate_argnums=1)
+            else:
+                ssh = self._state_sh(pstate)
+                tok_sp, row_sp = proxy_stream_pspecs(self.ctx, B)
+                jitted = jax.jit(
+                    fn,
+                    in_shardings=(self._param_sh, ssh, self._ns(tok_sp),
+                                  self._ns(row_sp), self._ns(row_sp),
+                                  self._ns(P())),
+                    out_shardings=ssh,
+                    donate_argnums=1,
+                )
+            self._programs[key] = jitted
+        return self._programs[key](
+            params, pstate, jnp.asarray(gen_tokens, jnp.int32),
+            jnp.asarray(n_start, jnp.int32),
+            jnp.asarray(n_emitted, jnp.int32),
+            jnp.asarray(chunk_len, jnp.int32),
+        )

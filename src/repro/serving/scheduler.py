@@ -26,6 +26,14 @@ Capacity policy is per cache backend (``serving.cache.CacheConfig``):
   bookkeeping at admission time: admit whenever the free list covers the
   prompt blocks plus one decode page; an exiting request's pages return to
   the free list at harvest and immediately back the next admission.
+
+With ``monitor="proxy"`` serving (docs/serving.md §Black-box monitoring)
+an admission enters TWO caches — the generator's and the proxy tier's —
+each with its own pool and allocator.  ``pools_can_admit`` is the combined
+gate: the request stays queued (defers) unless EVERY pool can cover it, so
+an exhausted proxy pool back-pressures admission independently of the
+generator pool (and vice versa), and either pool's harvest-time frees can
+be the ones that unblock it.
 """
 from __future__ import annotations
 
@@ -133,6 +141,17 @@ class SlotScheduler:
             )
 
 
+def pools_can_admit(prompt_tokens: int, *allocs) -> bool:
+    """Admission gate across every page pool a request must enter (the
+    generator's, plus the proxy tier's in ``monitor="proxy"`` serving).
+    ``allocs`` entries may be None (that cache is a ring — no page gate) or
+    a ``PageAllocator``; admission defers unless every pool present can
+    cover the prompt blocks plus one decode page.  Deliberately all-or-
+    nothing BEFORE any pool allocates, so a half-admitted request can never
+    strand pages in one pool while waiting on the other."""
+    return all(a.can_admit(prompt_tokens) for a in allocs if a is not None)
+
+
 class PageAllocator:
     """Free-page bookkeeping for the block-paged KV cache (pure host).
 
@@ -152,13 +171,17 @@ class PageAllocator:
     """
 
     def __init__(self, num_pages: int, page_size: int, n_blocks: int,
-                 batch: int):
+                 batch: int, *, sizing_knob: str = "CacheConfig.num_pages"):
         if num_pages < 2:
             raise ValueError("num_pages must be >= 2 (page 0 is reserved "
                              "as the trash page)")
         self.num_pages = num_pages
         self.page_size = page_size
         self.n_blocks = n_blocks
+        # which config field the exhaustion error tells the operator to
+        # raise — the proxy tier's pool is sized by ProxyConfig, not the
+        # engine's CacheConfig
+        self.sizing_knob = sizing_knob
         self.table = np.zeros((batch, n_blocks), np.int32)
         # LIFO free list -> a freed page is the next one handed out, which
         # maximises page reuse within a batch (and the reuse counter below
@@ -168,6 +191,13 @@ class PageAllocator:
         self._ever_used: set[int] = set()
         self.pages_reused = 0
         self.peak_pages_in_use = 0
+        # admission ATTEMPTS this pool gated (the request stayed queued
+        # because THIS pool's free list could not cover it) — the engine
+        # increments it per gated sweep attempt, so the same deferred
+        # request re-attempted at a later chunk boundary (or into another
+        # free slot) counts again; it distinguishes proxy-pool pressure
+        # from generator-pool pressure in tests and stats
+        self.deferrals = 0
         # True whenever self.table differs from the last snapshot() — the
         # engine skips the per-chunk host->device table upload when clean
         self.dirty = True
@@ -199,7 +229,7 @@ class PageAllocator:
             raise RuntimeError(
                 f"paged KV cache exhausted: 0 of {self.num_pages - 1} data "
                 f"pages free while mapping block {block} of row {row}. "
-                f"Size CacheConfig.num_pages to the peak live-token count "
+                f"Size {self.sizing_knob} to the peak live-token count "
                 f"(~batch * (prompt + budget) / page_size), or lower the "
                 f"batch size."
             )

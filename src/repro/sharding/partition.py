@@ -202,6 +202,19 @@ def param_shardings(params, cfg: ModelConfig, ctx: ShardCtx):
     return jax.tree_util.tree_map(lambda s: NamedSharding(ctx.mesh, s), specs)
 
 
+def proxy_stream_pspecs(ctx: ShardCtx, batch: int):
+    """PartitionSpecs for the generator-stream inputs of the proxy shadow
+    program (``serving.executor.ProxyExecutor.observe_chunk``): the emitted
+    token buffer (B, T) and the per-row offset/count vectors (B,).  Rows
+    ride the data axis exactly like every other per-slot array (same
+    divisibility rule as ``batch_entry_for`` — B=1 admission shapes
+    replicate), columns replicate.  Returns ``(tokens, per_row)`` specs;
+    scalars (the chunk bound) use ``P()`` at the call site.
+    """
+    b = ctx.batch_entry_for(batch)
+    return P(b, None), P(b)
+
+
 def serve_state_pspecs(cfg: ModelConfig, ctx: ShardCtx, state):
     """PartitionSpec pytree for a ``serving.executor.ServeState``.
 

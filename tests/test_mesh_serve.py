@@ -3,9 +3,13 @@ of 8 simulated host devices must produce token-for-token identical outputs,
 exit steps, and EAT trajectories to single-device serving on the tiny
 config — through BOTH cache backends: the dense ring and the block-paged
 pool (the paged mesh run is compared against the single-device RING run, so
-one assertion pins backend x mesh equivalence at once).  Real multi-shard
-semantics need >1 device, so the meat runs in a subprocess with 8 forced
-host devices (tests keep 1 device, like ``test_sharded_attention``)."""
+one assertion pins backend x mesh equivalence at once), and through BOTH
+monitor tiers: self-EAT and the black-box proxy (``monitor="proxy"`` with a
+same-params proxy is bit-equal to single-device self-EAT —
+tests/test_proxy_serve.py — so the single self reference pins mesh
+proxy-driven exits too).  Real multi-shard semantics need >1 device, so the
+meat runs in a subprocess with 8 forced host devices (tests keep 1 device,
+like ``test_sharded_attention``)."""
 import os
 import subprocess
 import sys
@@ -23,11 +27,12 @@ from repro.launch.mesh import local_ctx, make_device_ctx
 from repro.models import Model
 from repro.serving.cache import CacheConfig
 from repro.serving.engine import EngineConfig, ReasoningEngine
+from repro.serving.proxy import ProxyConfig
 from repro.serving.sampler import SamplerConfig
 
 assert len(jax.devices()) == 8, jax.devices()
 
-def build(ctx, delta, cache_kind="ring"):
+def build(ctx, delta, cache_kind="ring", proxy=False):
     cfg = get_config("tiny")
     model = Model(cfg, ctx, attn_impl="xla")
     params = model.init(jax.random.PRNGKey(11))   # same key => same weights
@@ -43,7 +48,8 @@ def build(ctx, delta, cache_kind="ring"):
         probe=make_probe(Tokens.END_THINK, (Tokens.ANS,)),
         schedule="every_n", every_n=4, min_evals=1,
     )
-    return ReasoningEngine(model, params, ecfg, monitor)
+    pcfg = ProxyConfig(model=model, params=params) if proxy else None
+    return ReasoningEngine(model, params, ecfg, monitor, proxy=pcfg)
 
 task = ChainTask()
 b = task.serve_batch(np.random.default_rng(7), 6)
@@ -79,6 +85,38 @@ for delta in (1e9, 0.0):      # exit-at-first-eval AND run-to-budget regimes
         print(f"serve delta={delta} cache={kind} equivalent "
               f"over {len(ref)} requests")
 
+# ---- monitor="proxy" on the mesh: the generator decodes blind and a
+# same-params proxy supplies the exits — outputs must still match the
+# single-device SELF reference token-for-token through both backends (the
+# proxy-driven-exit regime, delta=1e9: every request exits at the proxy's
+# first evaluation)
+ref_eng = build(local_ctx(), 1e9)
+ref = ref_eng.serve(b["prompts"], b["prompt_len"], jax.random.PRNGKey(0),
+                    batch_size=4, max_tokens=24, answer_len=4,
+                    record_trace=True)
+for kind in ("ring", "paged"):
+    mesh_eng = build(make_device_ctx(4, 2), 1e9, cache_kind=kind, proxy=True)
+    out = mesh_eng.serve(b["prompts"], b["prompt_len"], jax.random.PRNGKey(0),
+                         batch_size=4, max_tokens=24, answer_len=4,
+                         record_trace=True)
+    for r, o in zip(ref, out):
+        assert r["n_reasoning"] == o["n_reasoning"], (kind, r, o)
+        assert r["exit_reason"] == o["exit_reason"], (kind, r, o)
+        assert r["ended_think"] == o["ended_think"], (kind, r, o)
+        np.testing.assert_array_equal(r["reasoning_tokens"],
+                                      o["reasoning_tokens"])
+        np.testing.assert_array_equal(r["answer_tokens"], o["answer_tokens"])
+        assert len(r["eat_trace"]) == len(o["eat_trace"]), kind
+        for (n1, e1, v1), (n2, e2, v2) in zip(r["eat_trace"], o["eat_trace"]):
+            assert (n1, e1) == (n2, e2)
+            np.testing.assert_allclose(v1, v2, atol=1e-5)
+    # black-box contract holds on the mesh too
+    gk = mesh_eng.executor._programs
+    assert not [k for k in gk if k[0] == "probe"], gk.keys()
+    assert not [k for k in gk if k[0] == "chunk" and k[2]], gk.keys()
+    print(f"serve monitor=proxy cache={kind} equivalent over {len(ref)} "
+          f"requests")
+
 # ---- reason(): one batch, monitored, compare exit latches + EAT values
 ref_eng = build(local_ctx(), 1e9)
 mesh_eng = build(make_device_ctx(4, 2), 1e9)
@@ -108,6 +146,6 @@ def test_mesh_serve_equivalence_8dev():
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     env["JAX_PLATFORMS"] = "cpu"
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
-                       text=True, env=env, timeout=600)
+                       text=True, env=env, timeout=900)
     assert r.returncode == 0, r.stdout + r.stderr
     assert "done" in r.stdout

@@ -1,5 +1,6 @@
-"""Host-side serving layers: request lifecycle state machine + slot
-scheduler policy.  Pure Python — no model, no device."""
+"""Host-side serving layers: request lifecycle state machine, slot
+scheduler policy, and the dual-pool (generator + proxy tier) admission
+gate.  Pure Python — no model, no device."""
 import numpy as np
 import pytest
 
@@ -10,7 +11,11 @@ from repro.serving.request import (
     Request,
     RequestStatus,
 )
-from repro.serving.scheduler import SlotScheduler
+from repro.serving.scheduler import (
+    PageAllocator,
+    SlotScheduler,
+    pools_can_admit,
+)
 
 
 def _reqs(n):
@@ -110,3 +115,51 @@ def test_scheduler_capacity_guard():
     sched.check_capacity(10, "the initial batch")        # 34 <= 48: fine
     with pytest.raises(RuntimeError, match="capacity"):
         sched.check_capacity(30, "another admission")    # 54 > 48: wrap
+
+
+# ------------------------------------------- dual-pool (proxy) admission gate
+def test_pools_can_admit_gates_on_every_pool():
+    """monitor="proxy" admission enters two caches; the combined gate must
+    defer unless EVERY pool present covers the prompt, and skip ring caches
+    (None entries) entirely."""
+    gen = PageAllocator(num_pages=12, page_size=8, n_blocks=8, batch=2)
+    proxy = PageAllocator(num_pages=4, page_size=8, n_blocks=8, batch=2)
+    # prompt of 12 tokens: 2 blocks + 1 decode page per pool
+    assert pools_can_admit(12, gen, proxy)
+    # exhaust the PROXY pool only: gen alone would admit, the pair defers
+    proxy.ensure(0, 0, 15)                               # 2 of 3 data pages
+    assert gen.can_admit(12)
+    assert not proxy.can_admit(12)
+    assert not pools_can_admit(12, gen, proxy)
+    # ring caches contribute no page gate
+    assert pools_can_admit(12, None, None)
+    assert pools_can_admit(12, gen, None)
+    assert not pools_can_admit(12, None, proxy)
+
+
+def test_proxy_pool_exhaustion_defers_independently_of_generator():
+    """The serve-loop admission pattern with a starved PROXY pool: the
+    request stays queued (deferral counted against the proxy pool, not the
+    generator's) until a mid-flight exit frees the proxy row's pages — the
+    same-batch reuse scenario with the blockage on the monitor side."""
+    gen = PageAllocator(num_pages=32, page_size=8, n_blocks=8, batch=2)
+    proxy = PageAllocator(num_pages=6, page_size=8, n_blocks=8, batch=2)
+    S = 12
+    # slot 0 resident in both pools: prompt blocks + a decode block
+    for pool in (gen, proxy):
+        pool.admit_row(0, S, cur=16)
+    assert proxy.free_pages == 2                         # 5 data - 3 held
+    # slot 1 freed by the generator, but the proxy pool cannot take the
+    # next prompt -> the engine's deferral bookkeeping
+    if not pools_can_admit(S, gen, proxy):
+        for a in (gen, proxy):
+            if a is not None and not a.can_admit(S):
+                a.deferrals += 1
+    assert (gen.deferrals, proxy.deferrals) == (0, 1)
+    # slot 0's request exits mid-flight: harvest frees BOTH pools' pages,
+    # and the deferred admission proceeds in the same batch
+    assert gen.free_row(0) == 3 and proxy.free_row(0) == 3
+    assert pools_can_admit(S, gen, proxy)
+    table_row = proxy.admit_row(1, S, cur=24)
+    assert (table_row[:2] != 0).all()                    # prompt mapped
+    assert proxy.pages_reused > 0                        # from slot 0's frees
