@@ -25,6 +25,16 @@ reclaims an exiting request's pages mid-batch, and admits the whole queue.
 ``both`` emits ``artifacts/BENCH_paged_cache.json`` (requests-served and
 tok/s per backend — docs/serving.md §Choosing a cache backend).
 
+``--attn`` runs the dense-gather vs page-native decode-attention A/B
+(docs/serving.md §Page-native attention): per-token decode cost at a FIXED
+occupancy (live mapped slots per row) across a logical-capacity sweep — the
+``num_pages`` pool grows ring-equivalently with capacity while the live
+tokens do not.  The gather path materializes the (B, capacity) logical view
+every step, so its per-token cost scales with the sweep; the page-native
+path reads only the mapped pages through the compacted page list, so its
+cost stays flat at equal occupancy.  Emits
+``artifacts/BENCH_paged_attn.json``.
+
 ``--monitor proxy`` runs the self-EAT vs black-box proxy-EAT serving A/B
 (docs/serving.md §Black-box monitoring) on a mixed-exit greedy workload
 (delta auto-calibrated to the median first-evaluation variance, so part of
@@ -224,6 +234,131 @@ def run_cache_bench(args) -> dict:
     return rec
 
 
+def run_attn_bench(args) -> dict:
+    """Dense-gather vs page-native decode attention: per-token cost vs
+    logical capacity at fixed occupancy.
+
+    For each capacity in the sweep, both engines hold the SAME live state:
+    ``--attn-occupancy`` mapped slots per row of a ``--batch``-row paged
+    cache whose physical pool is sized to that occupancy and HELD FIXED —
+    the sweep grows only the logical capacity (the batch-lifetime bound a
+    longer request queue needs; int32 metadata plus, for the gather path,
+    the materialized logical view).  The timed program is the DONATING
+    unmonitored ``decode_chunk``
+    — the actual serving hot path, pools aliased in place (the non-donating
+    ``decode_step`` would copy the whole pool every call and swamp the
+    attention delta) — with identical sampling/bookkeeping either way, so
+    the measured delta is the attention read: gather cost ~ capacity,
+    page-native cost ~ mapped pages.  ``end_think_id`` is parked on an
+    unreachable id so every row decodes the full chunk.
+    """
+    from repro.serving.cache import alloc_paged_template
+    from repro.serving.scheduler import PageAllocator
+
+    task = ChainTask()
+    B, ps = args.batch, args.page_size
+    batch = task.serve_batch(np.random.default_rng(0), B)
+    S = batch["prompts"].shape[1]
+    # occupancy must cover the prompt + every decoded token of the timing
+    # run (writing into an unmapped page would attend trash), and stays
+    # FIXED across the capacity sweep
+    decoded = (args.reps + 1) * args.attn_iters
+    occ = page_align(max(args.attn_occupancy, S + decoded + ps), ps)
+    too_small = [c for c in args.attn_capacities if page_align(c, ps) < occ]
+    if too_small:
+        # a capacity below the occupancy would silently clamp the mapped
+        # span and wrap the ring mid-timing — the fixed-occupancy premise
+        # (and so the whole A/B) would be false for those points
+        raise SystemExit(
+            f"--attn-capacities {too_small} are smaller than the {occ}-slot "
+            f"occupancy this timing run needs (prompt {S} + "
+            f"(reps+1)*iters {decoded} decoded tokens, page-aligned); "
+            f"raise them or lower --reps / --attn-iters / --attn-occupancy")
+
+    def decode_state(engine):
+        """The serve()-paged setup at a pinned occupancy: prompt prefill,
+        ``occ`` slots of mapped pages per row, packed into the pool."""
+        ecfg = engine.ecfg
+        ccfg = ecfg.cache
+        C_log = page_align(ecfg.capacity, ps)
+        n_blocks = C_log // ps
+        # pool sized to the LIVE tokens, constant across the sweep — the
+        # whole point of paging: physical footprint tracks occupancy, not
+        # the logical bound
+        num_pages = B * (occ // ps) + 1
+        alloc = PageAllocator(num_pages, ps, n_blocks, B)
+        st = engine.start(jnp.asarray(batch["prompts"]),
+                          jnp.asarray(batch["prompt_len"]),
+                          jax.random.PRNGKey(0), capacity=page_align(S, ps))
+        for row in range(B):
+            alloc.ensure(row, 0, occ - 1)
+        template = alloc_paged_template(
+            engine.model.cfg, B, C_log, ps, num_pages, alloc=alloc,
+            native=ccfg.attn_impl != "gather")
+        st = st._replace(cache=engine.executor.pack_paged(
+            template, st.cache, alloc.table))
+        return st, num_pages
+
+    def time_decode(engine, st) -> float:
+        iters = args.attn_iters
+        budget = jnp.asarray(1 << 30, jnp.int32)
+        chunk = jnp.asarray(iters, jnp.int32)
+        # decode_chunk DONATES st: continue from the returned state
+        st = engine.executor.decode_chunk(engine.params, st, budget, chunk,
+                                          use_monitor=False)    # warmup
+        jax.block_until_ready(st.out_tokens)
+        times = []
+        for _ in range(args.reps):
+            t0 = time.perf_counter()
+            st = engine.executor.decode_chunk(engine.params, st, budget,
+                                              chunk, use_monitor=False)
+            jax.block_until_ready(st.out_tokens)
+            times.append((time.perf_counter() - t0) / iters)
+        return float(np.median(times))
+
+    points = []
+    for cap in args.attn_capacities:
+        point = {"capacity": int(page_align(cap, ps))}
+        for label, impl in (("gather", "gather"), ("page_native", "xla")):
+            engine = build_engine(
+                args.budget, capacity=cap,
+                cache=CacheConfig(kind="paged", page_size=ps,
+                                  attn_impl=impl))
+            # no row may stop mid-chunk: park </think> on an unreachable id
+            # (programs are built lazily, after this)
+            engine.ecfg.end_think_id = -7
+            st, num_pages = decode_state(engine)
+            point["num_pages"] = num_pages
+            point[label + "_s_per_tok"] = time_decode(engine, st)
+        points.append(point)
+        print(f"capacity={point['capacity']:5d}  pages={point['num_pages']:5d}  "
+              f"gather={point['gather_s_per_tok'] * 1e3:7.2f} ms/tok  "
+              f"page-native={point['page_native_s_per_tok'] * 1e3:7.2f} ms/tok",
+              flush=True)
+
+    g = [p["gather_s_per_tok"] for p in points]
+    n = [p["page_native_s_per_tok"] for p in points]
+    rec = {
+        "workload": "decode_cost_vs_logical_capacity", "batch": B,
+        "page_size": ps, "occupancy_slots": int(occ),
+        "capacities": [p["capacity"] for p in points], "points": points,
+        # the acceptance shape: gather grows across the sweep, page-native
+        # stays flat at equal occupancy
+        "gather_cost_growth": g[-1] / g[0],
+        "page_native_cost_growth": n[-1] / n[0],
+        "page_native_flat": n[-1] / n[0] < (g[-1] / g[0]) / 2,
+    }
+    path = args.out or os.path.join(
+        os.path.dirname(__file__), "..", "artifacts",
+        "BENCH_paged_attn.json")
+    write_json(path, rec)
+    print(f"gather grows {rec['gather_cost_growth']:.2f}x over the sweep; "
+          f"page-native {rec['page_native_cost_growth']:.2f}x "
+          f"(flat={rec['page_native_flat']})")
+    print(f"wrote {os.path.normpath(path)}")
+    return rec
+
+
 def run_proxy_bench(args) -> dict:
     """Self-EAT vs black-box proxy-EAT serving A/B on one mixed-exit greedy
     workload (paper Fig. 5 through the serving stack).
@@ -417,6 +552,18 @@ def main():
                     help="--cache workload queue length (0 = 4 * --batch)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="--cache paged backend page size (logical slots)")
+    ap.add_argument("--attn", action="store_true",
+                    help="run the dense-gather vs page-native decode-"
+                         "attention A/B across a logical-capacity sweep "
+                         "(writes artifacts/BENCH_paged_attn.json)")
+    ap.add_argument("--attn-capacities", type=int, nargs="+",
+                    default=[256, 512, 1024, 2048, 4096],
+                    help="--attn: logical capacities to sweep")
+    ap.add_argument("--attn-occupancy", type=int, default=64,
+                    help="--attn: live mapped slots per row (held fixed "
+                         "across the sweep)")
+    ap.add_argument("--attn-iters", type=int, default=16,
+                    help="--attn: decode steps per timing sample")
     ap.add_argument("--monitor", choices=["proxy"], default=None,
                     help="run the self-EAT vs black-box proxy-EAT serve() "
                          "A/B (writes artifacts/BENCH_proxy_serve.json)")
@@ -431,11 +578,15 @@ def main():
         # every path medians over the timed reps: zero reps would write
         # NaN seconds/tok/s into the artifact without erroring
         ap.error("--reps must be >= 1 (rep 0 is compile warmup)")
-    if args.monitor and (args.cache or args.scaling):
+    modes = [m for m, on in (("--monitor proxy", args.monitor),
+                             ("--cache", args.cache),
+                             ("--scaling", args.scaling),
+                             ("--attn", args.attn)) if on]
+    if len(modes) > 1:
         # each mode is its own A/B with its own artifact — running one
         # silently while another flag is set hides the un-run benchmark
-        ap.error("--monitor proxy is a standalone A/B; drop "
-                 "--cache/--scaling (run them separately)")
+        ap.error(f"{' and '.join(modes)} are standalone A/Bs; run them "
+                 f"separately")
 
     if args.serve_child:
         rec = run_serve_child(args.serve_child, args.batch, args.budget,
@@ -446,6 +597,8 @@ def main():
         return run_scaling_sweep(args)
     if args.cache:
         return run_cache_bench(args)
+    if args.attn:
+        return run_attn_bench(args)
     if args.monitor == "proxy":
         return run_proxy_bench(args)
 

@@ -3,6 +3,8 @@
 #                      (the EAT signal itself, Eq. 5 of the paper)
 #   flash_attention  — prefill/train attention, explicit-position masking
 #   decode_attention — flash-decode over the KV cache (serve_step)
+#   paged_attention  — page-table-native flash-decode off the paged pools
+#                      (O(mapped pages) per token; bit-exact ring comparator)
 #   ssd_scan         — Mamba2 SSD chunk scan (mamba2/zamba2 archs)
 # Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 # wrapper with XLA fallback), ref.py (pure-jnp oracle).

@@ -1,0 +1,5 @@
+from repro.kernels.paged_attention.ops import (  # noqa: F401
+    block_positions,
+    paged_decode_attention,
+    ring_decode_attention,
+)

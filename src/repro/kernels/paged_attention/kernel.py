@@ -1,0 +1,132 @@
+"""Pallas TPU page-table-native flash-decode kernel.
+
+Unlike ``decode_attention`` (which reads a dense per-row (B, C, Hkv, hd)
+cache), this kernel reads K/V **directly from the physical page pools**
+through a per-row compacted page list: the grid is (batch, kv-head,
+page-rank) and the BlockSpec index maps resolve rank ``j`` of row ``b`` to
+physical page ``pages[b, j]`` via scalar prefetch
+(``pltpu.PrefetchScalarGridSpec``), so the only KV bytes that ever move are
+the mapped pages — per-token cost is O(mapped pages), independent of the
+logical cache capacity.  Ranks at or past ``counts[b]`` skip the whole
+accumulation (``pl.when``) and their index map points at the trash page
+(page 0), so the DMA for a skipped step is one page of dead weight at worst.
+
+GQA head grouping and the hard-zero masking discipline are carried over
+verbatim from ``decode_attention``: the q tile is (m * group_size, Dk) per
+kv head, masking uses explicit per-slot positions, and masked probabilities
+are exact 0.0 — combined with the sequential per-page accumulation order of
+``ref.block_decode_attention`` this keeps the paged==ring bit-exactness
+argument intact (skipped pages are identity steps; see ref.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(pages_ref, counts_ref, qp_ref, bpos_ref, q_ref, k_ref, v_ref,
+            o_ref, m_scr, l_scr, acc_scr, *, scale, window, n_ranks):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # ranks past the row's mapped count hold no KV: skip the accumulation
+    # entirely (the identity-step argument in ref.py makes this exact)
+    @pl.when(j < counts_ref[b])
+    def _accumulate():
+        q = q_ref[0, 0].astype(jnp.float32) * scale   # (rows, Dk) rows = m*g
+        k = k_ref[0, :, 0, :].astype(jnp.float32)     # (ps, Dk)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)     # (ps, Dv)
+        qp = qp_ref[0]                                # (rows,)
+        kp = bpos_ref[0, 0]                           # (ps,)
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        valid = (kp[None, :] >= 0) & (kp[None, :] <= qp[:, None])
+        if window:
+            valid &= (qp[:, None] - kp[None, :]) < window
+        s = jnp.where(valid, s, _NEG_INF)
+
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.where(valid, jnp.exp(s - m_new[:, None]), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+
+    @pl.when(j == n_ranks - 1)
+    def _emit():
+        l = l_scr[...]
+        out = jnp.where(l[:, None] > 0,
+                        acc_scr[...] / jnp.maximum(l[:, None], 1e-30), 0.0)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def paged_attention_pallas(
+    q: jax.Array,        # (B, m, Hq, Dk)   m small (decode/probe positions)
+    k_pool: jax.Array,   # (P, ps, Hkv, Dk) physical page pool
+    v_pool: jax.Array,   # (P, ps, Hkv, Dv)
+    pages: jax.Array,    # (B, NBK) int32 physical page per mapped rank
+    counts: jax.Array,   # (B,) int32 mapped ranks per row
+    bpos: jax.Array,     # (B, NBK, ps) int32 positions (-1 = masked)
+    q_pos: jax.Array,    # (B, m)
+    *,
+    window: int = 0,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    B, m, Hq, Dk = q.shape
+    ps, Hkv = k_pool.shape[1], k_pool.shape[2]
+    Dv = v_pool.shape[-1]
+    NBK = pages.shape[1]
+    g = Hq // Hkv
+    rows = m * g
+    scale = scale if scale is not None else 1.0 / (Dk ** 0.5)
+
+    # regroup q to (B, Hkv, m*g, Dk): row r = position (r // g), head (r % g)
+    qg = q.reshape(B, m, Hkv, g, Dk).transpose(0, 2, 1, 3, 4).reshape(
+        B, Hkv, rows, Dk)
+    qpg = jnp.broadcast_to(q_pos[:, :, None], (B, m, g)).reshape(B, rows)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,               # pages, counts
+        grid=(B, Hkv, NBK),
+        in_specs=[
+            pl.BlockSpec((1, rows), lambda b, h, j, pg, ct: (b, 0)),
+            pl.BlockSpec((1, 1, ps), lambda b, h, j, pg, ct: (b, j, 0)),
+            pl.BlockSpec((1, 1, rows, Dk), lambda b, h, j, pg, ct: (b, h, 0, 0)),
+            # the page-table hop: rank j of row b -> physical pool page
+            pl.BlockSpec((1, ps, 1, Dk), lambda b, h, j, pg, ct: (pg[b, j], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, Dv), lambda b, h, j, pg, ct: (pg[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rows, Dv), lambda b, h, j, pg, ct: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rows,), jnp.float32),
+            pltpu.VMEM((rows,), jnp.float32),
+            pltpu.VMEM((rows, Dv), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, window=window, n_ranks=NBK),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, rows, Dv), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(pages, jnp.int32), jnp.asarray(counts, jnp.int32),
+      qpg, bpos, qg, k_pool, v_pool)
+    # back to (B, m, Hq, Dv)
+    return out.reshape(B, Hkv, m, g, Dv).transpose(0, 2, 1, 3, 4).reshape(
+        B, m, Hq, Dv)

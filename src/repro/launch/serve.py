@@ -43,9 +43,21 @@ def main():
                          "production mesh)")
     ap.add_argument("--top-k", type=int, default=0,
                     help="top-k sampling cutoff (0 = off)")
+    ap.add_argument("--typical-p", type=float, default=1.0,
+                    help="locally-typical sampling mass (1 = off)")
     ap.add_argument("--min-p", type=float, default=0.0,
                     help="min-p sampling cutoff relative to the max-prob "
                          "token (0 = off)")
+    ap.add_argument("--attn-impl",
+                    choices=["gather", "auto", "xla", "pallas"],
+                    default="gather",
+                    help="decode/probe attention implementation: gather "
+                         "(materialize the paged cache's logical view) or "
+                         "the page-native path (auto/xla/pallas — K/V read "
+                         "straight off the page pools through the mapped-"
+                         "page list, O(mapped pages) per token; 'pallas' "
+                         "runs the TPU kernel, in interpret mode on CPU — "
+                         "docs/serving.md)")
     ap.add_argument("--chunk", type=int, default=32,
                     help="decode steps per jitted dispatch")
     ap.add_argument("--requests", type=int, default=0,
@@ -101,12 +113,16 @@ def main():
         print("WARNING: no checkpoint — random weights")
         params = model.init(jax.random.PRNGKey(0))
 
+    from repro.serving.cache import CacheConfig
+
     ecfg = EngineConfig(
         max_reasoning_tokens=args.budget, capacity=args.budget + 128,
         pad_id=Tokens.PAD, end_think_id=Tokens.END_THINK,
         newline_id=Tokens.NEWLINE, eos_id=Tokens.EOS,
         sampler=SamplerConfig(temperature=0.6, top_p=0.95,
-                              top_k=args.top_k, min_p=args.min_p),
+                              top_k=args.top_k, typical_p=args.typical_p,
+                              min_p=args.min_p),
+        cache=CacheConfig(attn_impl=args.attn_impl),
     )
     monitor = ReasoningMonitor(
         stopper=EATStopper(alpha=args.alpha, delta=args.delta),
@@ -139,17 +155,16 @@ def main():
             proxy_params = proxy_model.init(jax.random.PRNGKey(1))
         proxy = ProxyConfig(model=proxy_model, params=proxy_params)
 
-    engine = ReasoningEngine(model, params, ecfg, monitor, proxy=proxy)
-
     task = ChainTask()
     if args.requests:
-        # continuous batching: args.batch slots over a longer request queue;
-        # early-exiting sequences free their slot for the next prompt.  The
-        # shared ring pointer advances for the whole run, so (logical)
-        # capacity must cover the batch-lifetime worst case, not one
-        # budget; with --cache paged that capacity is int32 metadata and
-        # the PHYSICAL footprint is --num-pages pages of live KV.
-        from repro.serving.cache import CacheConfig
+        # continuous batching: args.batch slots over a longer request
+        # queue; early-exiting sequences free their slot for the next
+        # prompt.  The shared ring pointer advances for the whole run, so
+        # (logical) capacity must cover the batch-lifetime worst case, not
+        # one budget; with --cache paged that capacity is int32 metadata
+        # and the PHYSICAL footprint is --num-pages pages of live KV.  The
+        # cache config must be final BEFORE the engine is built — the
+        # engine bakes --attn-impl/--page-size into its model.
         from repro.serving.scheduler import SlotScheduler
 
         batch = task.serve_batch(np.random.default_rng(0), args.requests)
@@ -157,7 +172,12 @@ def main():
             batch["prompts"].shape[1], args.requests, args.batch, args.budget
         )
         ecfg.cache = CacheConfig(kind=args.cache, page_size=args.page_size,
-                                 num_pages=args.num_pages)
+                                 num_pages=args.num_pages,
+                                 attn_impl=args.attn_impl)
+
+    engine = ReasoningEngine(model, params, ecfg, monitor, proxy=proxy)
+
+    if args.requests:
         results = engine.serve(batch["prompts"], batch["prompt_len"],
                                jax.random.PRNGKey(0), batch_size=args.batch,
                                answer_len=4)

@@ -30,6 +30,19 @@ class Model:
     ctx: ShardCtx = ShardCtx()
     attn_impl: str = "auto"
     unroll: bool = False      # unroll layer scans (dry-run cost probes only)
+    # decode/probe attention over a serving cache (kernels/paged_attention):
+    #   "gather"            — classic: paged caches materialize the gathered
+    #                         logical view, ring caches read densely
+    #   "auto"/"xla"/"pallas" — page-native: paged caches read K/V straight
+    #                         off the pools through the compacted page list
+    #                         (O(mapped pages) per token); ring caches run
+    #                         the same block-sequential algorithm, so the
+    #                         two backends stay bit-identical per impl.
+    # ``paged_attn_page`` is the ring comparator's block size — it must
+    # match the paged cache's CacheConfig.page_size for the bit-exactness
+    # A/B (the engine threads both from EngineConfig.cache).
+    paged_attn_impl: str = "gather"
+    paged_attn_page: int = 16
 
     # ---------------------------------------------------------------- init
     def init(self, key) -> dict:
@@ -129,6 +142,7 @@ class Model:
         hidden, cache, _ = tfm.forward_cached(
             params["stack"], x, positions, pos1d, slots, cache, cfg, ctx,
             attn_impl=self.attn_impl, window=window, unroll=self.unroll,
+            paged_impl=self.paged_attn_impl, page_block=self.paged_attn_page,
         )
         return hidden, cache
 
@@ -144,6 +158,7 @@ class Model:
         hidden, cache, _ = tfm.forward_cached(
             params["stack"], x, positions, pos1d, slots, cache, cfg, ctx,
             attn_impl=self.attn_impl, window=window, unroll=self.unroll,
+            paged_impl=self.paged_attn_impl, page_block=self.paged_attn_page,
         )
         return self.logits(params, hidden), cache
 
@@ -188,6 +203,7 @@ class Model:
         hidden, new_cache, _ = tfm.forward_cached(
             params["stack"], x, positions, pos1d, slots, cache, cfg, ctx,
             attn_impl=self.attn_impl, window=window, unroll=self.unroll,
+            paged_impl=self.paged_attn_impl, page_block=self.paged_attn_page,
         )
         new_cache["cur"] = cache["cur"] + 1            # commit decode only
         logits = self.logits(params, hidden[:, :1])
@@ -211,6 +227,7 @@ class Model:
         hidden, _discarded, _ = tfm.forward_cached(
             params["stack"], x, positions, pos1d, slots, cache, cfg, ctx,
             attn_impl=self.attn_impl, window=window, unroll=self.unroll,
+            paged_impl=self.paged_attn_impl, page_block=self.paged_attn_page,
         )
         h_last = hidden[:, -1]
         w = self.unembed_matrix(params)

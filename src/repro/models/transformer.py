@@ -81,6 +81,20 @@ def scatter_pages(pool: jax.Array, table: jax.Array, slots: jax.Array,
     return pool.at[pages, offs].set(new.astype(pool.dtype))
 
 
+def page_native_ok(cfg: ModelConfig, ctx: ShardCtx, m: int) -> bool:
+    """True when the page-native decode attention (kernels/paged_attention)
+    can serve this call: GQA entries (MLA latents keep the gather path),
+    decode/probe-sized query widths, and — on a mesh — kv heads divisible
+    by the model axis so the pools shard over heads (the not-divisible case
+    belongs to ``seq_sharded_decode_attention``).  The SAME predicate gates
+    the ring and the paged branches, so both backends always pick the same
+    implementation — the per-impl paged==ring bit-exactness contract."""
+    return (
+        cfg.mla is None and m <= 8
+        and (ctx.mesh is None or cfg.n_kv_heads % ctx.model_size == 0)
+    )
+
+
 # ===================================================================== init
 
 
@@ -232,16 +246,25 @@ def attn_block_cached(
     entry: dict, kv_pos, slots, *,
     use_moe: bool, window: int = 0, attn_impl: str = "auto",
     cross_cache: tuple | None = None, enc_pos=None, x_extra=None,
-    paged: tuple | None = None,
+    paged: tuple | None = None, paged_impl: str = "gather",
+    page_block: int = 16,
 ):
     """Cached block (prefill m=S / decode m small).  Returns (x, entry, aux).
 
     ``entry`` holds this layer's cache arrays; new K/V are scattered into
     ``slots`` (B-shared (m,) int32) before the attention read.  With
-    ``paged=(page_table, page_size)`` the entry arrays are page POOLS
-    ((P, ps, ...) instead of (B, C, ...)): new K/V scatter through the page
-    table and the attention reads the gathered logical view — same mask,
-    same ``kv_pos``, bit-identical output (docs/architecture.md).
+    ``paged=(page_table, page_size, blocks)`` the entry arrays are page
+    POOLS ((P, ps, ...) instead of (B, C, ...)): new K/V scatter through
+    the page table, and the attention read depends on ``paged_impl``:
+
+    * ``"gather"`` (default): materialize the gathered logical view — same
+      mask, same ``kv_pos``, bit-identical to the ring (docs/architecture.md);
+    * ``"auto"/"xla"/"pallas"`` with ``blocks`` present (the engine's
+      compacted mapped-page list): read K/V straight off the pools through
+      the page list — O(mapped pages) per token, no logical-view
+      materialization.  The ring branch routes through the SAME
+      block-sequential algorithm (``ring_decode_attention``) so the two
+      backends stay bit-identical per impl (kernels/paged_attention/ref.py).
     """
     h_in = x if x_extra is None else jnp.concatenate([x, x_extra], axis=-1)
     h = rmsnorm(h_in, p["norm1"], cfg.norm_eps, cfg.rmsnorm_one_plus)
@@ -250,7 +273,7 @@ def attn_block_cached(
         c_new, kr_new = att.mla_latent(p["attn"], h, positions, cfg)
         entry = dict(entry)
         if paged is not None:
-            table, _ps = paged
+            table = paged[0]
             entry["c"] = scatter_pages(entry["c"], table, slots, c_new)
             entry["kr"] = scatter_pages(entry["kr"], table, slots, kr_new)
             cache_c = gather_pages(entry["c"], table)
@@ -266,23 +289,62 @@ def attn_block_cached(
     else:
         q, k_new, v_new = att.gqa_qkv(p["attn"], h, positions, cfg)
         q = _heads_constraint(q, cfg, ctx)
+        native = paged_impl != "gather" and page_native_ok(cfg, ctx, x.shape[1])
         entry = dict(entry)
+        o = None
         if paged is not None:
-            table, _ps = paged
+            table, ps, blocks = paged
             entry["k"] = scatter_pages(entry["k"], table, slots, k_new)
             entry["v"] = scatter_pages(entry["v"], table, slots, v_new)
-            k_view = gather_pages(entry["k"], table)
-            v_view = gather_pages(entry["v"], table)
+            if native and blocks is None:
+                # a silent gather fallback here would split the per-impl
+                # paged==ring pairing (the ring side WOULD run the block
+                # scan) — fail at trace time instead; paged caches for the
+                # native impls come from cache.alloc_paged_template
+                raise ValueError(
+                    f"paged_impl={paged_impl!r} needs the compacted page "
+                    f"list: allocate the cache with "
+                    f"serving.cache.alloc_paged_template(..., native=True) "
+                    f"(or alloc_paged_cache(block_bucket=...))")
+            if native:
+                # page-native read: pools + compacted page list, no
+                # gathered logical view (O(mapped pages) per token)
+                from repro.kernels.paged_attention import ops as paged_ops
+
+                bpos = paged_ops.block_positions(
+                    kv_pos, blocks["pages"], blocks["logical"], ps)
+                o = paged_ops.paged_decode_attention(
+                    q, entry["k"], entry["v"], blocks["pages"],
+                    blocks["count"], bpos, pos1d, window=window,
+                    scale=att.attn_scale(cfg), impl=paged_impl,
+                )
+            else:
+                k_view = gather_pages(entry["k"], table)
+                v_view = gather_pages(entry["v"], table)
         else:
+            ps = page_block
             entry["k"] = entry["k"].at[:, slots].set(k_new.astype(entry["k"].dtype))
             entry["v"] = entry["v"].at[:, slots].set(v_new.astype(entry["v"].dtype))
             k_view, v_view = entry["k"], entry["v"]
-        if att.use_seq_sharded_cache(cfg, ctx, x.shape[1]):
+        if o is not None:
+            pass
+        elif att.use_seq_sharded_cache(cfg, ctx, x.shape[1]):
             # §Perf P1': partial-softmax decode over the seq-sharded cache
             # (avoids GSPMD all-gathering the cache every attention read)
             o = att.seq_sharded_decode_attention(
                 q, k_view, v_view, pos1d, kv_pos, ctx,
                 window=window, scale=att.attn_scale(cfg),
+            )
+        elif native and paged is None:
+            # the ring comparator of the page-native path: the SAME
+            # block-sequential accumulation over the dense cache (all
+            # blocks visited in logical order — ref.py's identity-step
+            # argument makes the paged path bit-identical to this one)
+            from repro.kernels.paged_attention import ops as paged_ops
+
+            o = paged_ops.ring_decode_attention(
+                q, k_view, v_view, pos1d, kv_pos, page_size=ps,
+                window=window, scale=att.attn_scale(cfg), impl=paged_impl,
             )
         else:
             o = att.attention(
@@ -460,6 +522,7 @@ def forward_cached(
     params: Params, x, positions, pos1d, slots, cache: Cache,
     cfg: ModelConfig, ctx: ShardCtx, *,
     attn_impl: str = "auto", window: int = 0, unroll: bool = False,
+    paged_impl: str = "gather", page_block: int = 16,
 ) -> tuple[jax.Array, Cache, jax.Array]:
     """Unified prefill (m=S) / decode / probe forward against a cache.
 
@@ -474,12 +537,15 @@ def forward_cached(
     aux_total = jnp.zeros((), jnp.float32)
     x = _res_constraint(x, ctx, False)
     layers = cache.get("layers", {})
-    # block-paged cache: thread (page_table, page_size) into the attention
-    # blocks — logical addressing (slots/pos/cur) is unchanged
+    # block-paged cache: thread (page_table, page_size, blocks) into the
+    # attention blocks — logical addressing (slots/pos/cur) is unchanged;
+    # ``blocks`` (the engine's compacted mapped-page list) enables the
+    # page-native read when ``paged_impl`` asks for it
     paged = None
     if "page_table" in cache:
         table = cache["page_table"]
-        paged = (table, cache["pos"].shape[1] // table.shape[1])
+        paged = (table, cache["pos"].shape[1] // table.shape[1],
+                 cache.get("blocks"))
 
     if cfg.arch_type in ("dense", "vlm", "moe", "encdec"):
         segs = []
@@ -505,6 +571,7 @@ def forward_cached(
                     p_layer, xx, positions, pos1d, cfg, ctx, entry, kv_pos, slots,
                     use_moe=use_moe, window=window, attn_impl=attn_impl,
                     cross_cache=cc, enc_pos=cache.get("enc_pos"), paged=paged,
+                    paged_impl=paged_impl, page_block=page_block,
                 )
                 if cross:  # cross kv is static; don't re-emit to save copies
                     entry_new["ck"], entry_new["cv"] = entry["ck"], entry["cv"]
@@ -554,6 +621,7 @@ def forward_cached(
                 params["shared_attn"], xx, positions, pos1d, cfg, ctx,
                 attn_entry, kv_pos, slots, use_moe=False, window=window,
                 attn_impl=attn_impl, x_extra=emb0, paged=paged,
+                paged_impl=paged_impl, page_block=page_block,
             )
             return (xx, aux + a), (st_group_new, attn_entry_new)
 

@@ -42,6 +42,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
@@ -91,6 +92,18 @@ class CacheConfig:
     # 0 = auto: ring-equivalent pool (batch * capacity/page_size data pages
     # + the trash page) — never refuses an admission the ring would accept
     num_pages: int = 0
+    # decode/probe attention implementation (kernels/paged_attention):
+    #   "gather"              — classic: the paged path materializes the
+    #                           gathered logical view before dense attention
+    #   "auto" | "xla" | "pallas" — page-native: K/V are read straight off
+    #                           the page pools through the compacted
+    #                           mapped-page list, so per-token decode cost is
+    #                           O(mapped pages) instead of O(logical
+    #                           capacity); the ring backend runs the same
+    #                           block-sequential algorithm, keeping
+    #                           paged == ring bit-exact per impl
+    #                           (docs/serving.md §--attn-impl)
+    attn_impl: str = "gather"
 
     def __post_init__(self):
         if self.kind not in ("ring", "paged"):
@@ -98,6 +111,9 @@ class CacheConfig:
                              f"got {self.kind!r}")
         if self.page_size < 1:
             raise ValueError("CacheConfig.page_size must be >= 1")
+        if self.attn_impl not in ("gather", "auto", "xla", "pallas"):
+            raise ValueError(f"CacheConfig.attn_impl must be one of "
+                             f"gather/auto/xla/pallas, got {self.attn_impl!r}")
 
 
 def _attn_entry(cfg: ModelConfig, lead: tuple[int, ...], B: int, C: int, dtype):
@@ -185,8 +201,44 @@ def _pooled_attn_entry(cfg: ModelConfig, lead: tuple[int, ...],
     }
 
 
+def blocks_arrays(pages, logical, counts) -> dict:
+    """Device form of the allocator's compacted mapped-page list (the
+    page-native attention's read index; ``PageAllocator.block_buckets``).
+    pages/logical: (B, NBK) int32 — physical page and logical block per
+    mapped rank, trash/0-padded past ``counts`` (B,); padding ranks read
+    the trash page with every position masked, so they are exact identity
+    steps in the block scan (kernels/paged_attention/ref.py)."""
+    return {
+        "pages": jnp.asarray(pages, jnp.int32),
+        "logical": jnp.asarray(logical, jnp.int32),
+        "count": jnp.asarray(counts, jnp.int32),
+    }
+
+
+def alloc_paged_template(cfg: ModelConfig, batch: int, capacity: int,
+                         page_size: int, num_pages: int, *,
+                         alloc=None, native: bool = False,
+                         dtype=None) -> dict:
+    """The pack_paged_cache template every paged serve start builds: an
+    empty paged cache, plus — in page-native mode — the allocator's
+    current compacted mapped-page buckets baked in (``alloc`` is a
+    ``scheduler.PageAllocator``; later refreshes ride
+    ``Executor.put_page_table``).  THE single definition of the blocks
+    baking ritual, shared by the engine, the proxy tier, and the
+    benchmarks — so the read-index format cannot fork between them."""
+    if not native:
+        return alloc_paged_cache(cfg, batch, capacity, page_size, num_pages,
+                                 dtype)
+    width = alloc.bucket_width()
+    cache = alloc_paged_cache(cfg, batch, capacity, page_size, num_pages,
+                              dtype, block_bucket=width)
+    cache["blocks"] = blocks_arrays(*alloc.block_buckets(width))
+    return cache
+
+
 def alloc_paged_cache(cfg: ModelConfig, batch: int, capacity: int,
-                      page_size: int, num_pages: int, dtype=None) -> dict:
+                      page_size: int, num_pages: int, dtype=None,
+                      block_bucket: int = 0) -> dict:
     """Allocate an empty block-paged cache.
 
     ``capacity`` is the LOGICAL ring length (must be a page multiple); the
@@ -194,6 +246,10 @@ def alloc_paged_cache(cfg: ModelConfig, batch: int, capacity: int,
     ``batch`` rows through the page table (initialised all-trash).  Leaves
     without a capacity axis (SSM/conv states, encdec cross K/V) stay dense —
     they are per-row recurrent state, not slot-addressed storage.
+
+    ``block_bucket`` > 0 adds the ``blocks`` arrays (width ``block_bucket``,
+    all-trash) that the page-native ``attn_impl`` modes read; the engine
+    refreshes them from the allocator before every dispatch.
     """
     dtype = dtype or jnp.dtype(cfg.dtype)
     if capacity % page_size:
@@ -207,6 +263,9 @@ def alloc_paged_cache(cfg: ModelConfig, batch: int, capacity: int,
         "cur": jnp.zeros((), jnp.int32),
         "page_table": jnp.full((B, NB), PAGE_TRASH, jnp.int32),
     }
+    if block_bucket:
+        z = np.zeros((B, block_bucket), np.int32)
+        cache["blocks"] = blocks_arrays(z, z, np.zeros((B,), np.int32))
     if cfg.arch_type in ("dense", "vlm"):
         cache["layers"] = {
             "seg": _pooled_attn_entry(cfg, (cfg.n_layers,), num_pages, page_size, dtype)
@@ -272,7 +331,12 @@ def pack_paged_cache(paged: dict, dense: dict, table) -> dict:
     merged = []
     for path, leaf in tree_flatten_with_paths(paged):
         name = path.split("/")[-1]
-        if name == "page_table":
+        if path.startswith("blocks/"):
+            # the compacted page list is host-owned: the engine bakes the
+            # allocator's current buckets into the template before packing
+            # and refreshes them before every dispatch (put_page_table)
+            merged.append(leaf)
+        elif name == "page_table":
             merged.append(jnp.asarray(table, jnp.int32))
         elif name == "pos":
             merged.append(leaf.at[:, :C_pre].set(dense["pos"]))
@@ -314,7 +378,11 @@ def merge_paged_row(cache: dict, one: dict, row, row_table) -> dict:
     merged = []
     for path, leaf in tree_flatten_with_paths(cache):
         name = path.split("/")[-1]
-        if name == "page_table":
+        if path.startswith("blocks/"):
+            # host-owned (see pack_paged_cache): the admitting engine pushes
+            # the allocator's fresh buckets before the next attention read
+            merged.append(leaf)
+        elif name == "page_table":
             merged.append(leaf.at[row].set(jnp.asarray(row_table, jnp.int32)))
         elif name == "pos":
             row_pos = jnp.full((C,), -1, jnp.int32).at[:C_pre].set(one["pos"][0])
@@ -439,6 +507,10 @@ def cache_pspecs(cfg: ModelConfig, ctx: ShardCtx, cache) -> dict:
         # lead = number of stacked layer axes before the batch axis
         if path_leaf == "page_table":
             return P(None, None)                             # replicated
+        if path_leaf in ("pages", "logical"):
+            return P(None, None)      # blocks/ page lists: replicated int32
+        if path_leaf == "count":
+            return P(None)
         if path_leaf in ("k", "v", "ck", "cv"):
             if kv_on_model:
                 return P(*([None] * lead), b, None, m, None)

@@ -50,7 +50,7 @@ from repro.models.model import Model
 from repro.serving.cache import (
     CacheConfig,
     alloc_cache,
-    alloc_paged_cache,
+    alloc_paged_template,
     page_align,
 )
 from repro.serving.executor import (
@@ -108,6 +108,17 @@ class ReasoningEngine:
                  proxy: ProxyConfig | None = None):
         from repro.core.stopping import EATStopper
 
+        # the decode-attention impl is an EngineConfig.cache knob
+        # (--attn-impl): bake it into the model so every executor program —
+        # chunk, probe, rollout, shadow — traces the same read path, and
+        # pin the ring comparator's block size to the paged page size (the
+        # per-impl paged==ring bit-exactness contract, docs/architecture.md)
+        ccfg = ecfg.cache
+        if (model.paged_attn_impl != ccfg.attn_impl
+                or model.paged_attn_page != ccfg.page_size):
+            model = dataclasses.replace(model,
+                                        paged_attn_impl=ccfg.attn_impl,
+                                        paged_attn_page=ccfg.page_size)
         self.model = model
         self.ecfg = ecfg
         if monitor is None:
@@ -131,7 +142,14 @@ class ReasoningEngine:
                     "to retract overshoot tokens; SSM/hybrid recurrences "
                     "cannot be rewound to the proxy's exit step."
                 )
-            self.proxy_executor = ProxyExecutor(proxy.model, proxy.params,
+            pccfg = proxy.cache or ecfg.cache
+            proxy_model = proxy.model
+            if (proxy_model.paged_attn_impl != pccfg.attn_impl
+                    or proxy_model.paged_attn_page != pccfg.page_size):
+                proxy_model = dataclasses.replace(
+                    proxy_model, paged_attn_impl=pccfg.attn_impl,
+                    paged_attn_page=pccfg.page_size)
+            self.proxy_executor = ProxyExecutor(proxy_model, proxy.params,
                                                 ecfg, monitor)
             self.proxy_params = self.proxy_executor.shard_params(proxy.params)
 
@@ -366,8 +384,9 @@ class ReasoningEngine:
         if paged:
             for req in cohort:
                 alloc.ensure(req.slot, 0, S - 1)       # the prompt pages
-            template = alloc_paged_cache(self.model.cfg, B, C_log, ps,
-                                         num_pages)
+            template = alloc_paged_template(
+                self.model.cfg, B, C_log, ps, num_pages, alloc=alloc,
+                native=ccfg.attn_impl != "gather")
             state = state._replace(cache=self.executor.pack_paged(
                 template, state.cache, alloc.table))
         if ptier is not None:

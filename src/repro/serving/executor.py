@@ -90,7 +90,10 @@ def cache_kind(cache: dict) -> str:
     """'paged' when the cache routes K/V through a page table, else 'ring'.
     Program-cache keys include this: the two kinds have different pytree
     structures, so their jitted programs (and mesh in/out shardings) are
-    built separately."""
+    built separately.  Executor keys additionally carry the decode-attention
+    impl (``Executor._kind``): a "paged+xla" program reads K/V through the
+    compacted page list, a plain "paged" one gathers — different traced
+    graphs even over the same pytree structure."""
     return "paged" if "page_table" in cache else "ring"
 
 
@@ -313,6 +316,15 @@ class Executor:
                                        probe_cond=True)
         self._step_plain = make_eat_step(model, None, ecfg.sampler)
 
+    def _kind(self, cache: dict) -> str:
+        """``cache_kind`` + the model's decode-attention impl — the program
+        key component the ``--attn-impl`` knob threads through, so a
+        page-native program can never be served from a gather key (or vice
+        versa) even if two executors share a program store in a test."""
+        kind = cache_kind(cache)
+        impl = self.model.paged_attn_impl
+        return kind if impl == "gather" else f"{kind}+{impl}"
+
     # ---------------------------------------------------------- shardings
     def _ns(self, spec: P):
         return mesh_ns(self.ctx, spec)
@@ -375,7 +387,7 @@ class Executor:
         # (tests/test_executor.py), which A/Bs the compiled memory stats of
         # the same program with and without the in-place cache alias.
         B = int(state.active.shape[0])
-        key = ("chunk", B, use_monitor, donate, cache_kind(state.cache))
+        key = ("chunk", B, use_monitor, donate, self._kind(state.cache))
         if key not in self._programs:
             step_fn = self._step_mon if use_monitor else self._step_plain
 
@@ -421,7 +433,7 @@ class Executor:
         per-token baseline for ``benchmarks/engine_throughput.py`` and unit
         tests (so the two paths can never diverge).  No donation: the
         benchmarks re-time it against one fixed state."""
-        key = ("decode", int(state.active.shape[0]), cache_kind(state.cache))
+        key = ("decode", int(state.active.shape[0]), self._kind(state.cache))
         if key not in self._programs:
             def fn(params, st: ServeState):
                 no_budget = jnp.asarray(jnp.iinfo(jnp.int32).max, jnp.int32)
@@ -483,7 +495,7 @@ class Executor:
     def probe(self, params, cache, next_pos):
         """Non-committing EAT probe over the live cache.  Never donated —
         the whole point is that the cache survives the evaluation."""
-        key = ("probe", int(next_pos.shape[0]), cache_kind(cache))
+        key = ("probe", int(next_pos.shape[0]), self._kind(cache))
         if key not in self._programs:
             model, monitor = self.model, self.monitor
 
@@ -615,15 +627,31 @@ class Executor:
         return self._programs[key](state, one, jnp.asarray(slot, jnp.int32),
                                    jnp.asarray(row_table, jnp.int32))
 
-    def put_page_table(self, state: ServeState, table) -> ServeState:
-        """Swap the host allocator's page table into the state (replicated
-        on the mesh).  Host->device upload of a few KB of int32 — called
-        once per chunk boundary, never inside a jitted program."""
-        dev = jnp.asarray(table, jnp.int32)
-        if self.ctx.mesh is not None:
-            dev = jax.device_put(dev, self._ns(P(None, None)))
+    def put_page_table(self, state: ServeState, table,
+                       blocks: tuple | None = None) -> ServeState:
+        """Swap the host allocator's page table — and, in page-native mode,
+        its compacted mapped-page buckets ``(pages, logical, counts)`` —
+        into the state (replicated on the mesh).  Host->device upload of a
+        few KB of int32 — called once per chunk boundary, never inside a
+        jitted program.  A bucket-width change simply retraces the next
+        dispatch (the NamedShardings are shape-agnostic)."""
+        from repro.serving.cache import blocks_arrays
+
+        def rep(x, spec):
+            dev = jnp.asarray(x, jnp.int32)
+            if self.ctx.mesh is not None:
+                dev = jax.device_put(dev, self._ns(spec))
+            return dev
+
         cache = dict(state.cache)
-        cache["page_table"] = dev
+        cache["page_table"] = rep(table, P(None, None))
+        if blocks is not None:
+            pages, logical, counts = blocks
+            dev = blocks_arrays(pages, logical, counts)
+            dev = {"pages": rep(dev["pages"], P(None, None)),
+                   "logical": rep(dev["logical"], P(None, None)),
+                   "count": rep(dev["count"], P(None))}
+            cache["blocks"] = dev
         return state._replace(cache=cache)
 
     def ensure_chunk_pages(self, alloc, state: ServeState, slots, span: int,
@@ -649,7 +677,11 @@ class Executor:
             alloc.ensure(s, cur0, cur0 + sp)
         if not alloc.dirty:
             return state
-        return self.put_page_table(state, alloc.snapshot())
+        # page-native caches carry the compacted read index: re-derive it
+        # from the (just-mutated) table so the two can never drift
+        blocks = (alloc.block_buckets(alloc.bucket_width())
+                  if "blocks" in state.cache else None)
+        return self.put_page_table(state, alloc.snapshot(), blocks)
 
     def retract(self, state: ServeState, new_n, pmon: MonitorState
                 ) -> ServeState:
@@ -671,7 +703,7 @@ class Executor:
         with no overshoot passes through unchanged.  DONATES ``state``.
         """
         key = ("retract", int(state.active.shape[0]),
-               cache_kind(state.cache))
+               self._kind(state.cache))
         if key not in self._programs:
             ecfg = self.ecfg
 
@@ -732,7 +764,7 @@ class Executor:
         decoding from (``reason_with_trace``) or re-rolls K times
         (``rollout_answers``) — donation here would corrupt the sequence."""
         B = int(next_pos.shape[0])
-        key = ("rollout", B, n, greedy, cache_kind(cache))
+        key = ("rollout", B, n, greedy, self._kind(cache))
         if key not in self._programs:
             model, cfg, ecfg = self.model, self.cfg, self.ecfg
 
@@ -824,7 +856,7 @@ class ProxyExecutor(Executor):
         """
         B = int(pstate.active.shape[0])
         T = int(gen_tokens.shape[1])
-        key = ("shadow", B, T, cache_kind(pstate.cache))
+        key = ("shadow", B, T, self._kind(pstate.cache))
         if key not in self._programs:
             shadow = self._shadow
 

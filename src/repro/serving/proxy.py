@@ -42,7 +42,7 @@ from repro.models.model import Model
 from repro.serving.cache import (
     CacheConfig,
     alloc_cache,
-    alloc_paged_cache,
+    alloc_paged_template,
     page_align,
 )
 from repro.serving.executor import ProxyExecutor, ServeState, positions_for
@@ -243,7 +243,11 @@ class ProxyTier:
         st = self._fresh(prompts, plen, self._C_pre)
         for row in rows:
             self.alloc.ensure(row, 0, S - 1)
-        template = alloc_paged_cache(self.ex.cfg, B, C_log, ps, num_pages)
+        # mirror the engine's template setup: page-native shadow decodes
+        # read through the proxy pool's own compacted page list
+        template = alloc_paged_template(
+            self.ex.cfg, B, C_log, ps, num_pages, alloc=self.alloc,
+            native=self.ccfg.attn_impl != "gather")
         self.state = st._replace(cache=self.ex.pack_paged(
             template, st.cache, self.alloc.table))
 

@@ -1,12 +1,17 @@
-"""Token sampling (temperature / top-k / top-p / min-p), jit-friendly,
-padded-vocab aware.
+"""Token sampling (temperature / top-k / top-p / typical-p / min-p),
+jit-friendly, padded-vocab aware.
 
 The paper's decoding config (App. H): temperature 0.6, top-p 0.95 (the
 DeepSeek model-card recommendation); greedy for confidence rollouts.
-``top_k`` and ``min_p`` are serving-stack extras (both off by default):
-filters apply in the conventional order top-k -> top-p -> min-p, each
-masking logits to -inf so the final categorical renormalizes over the
-surviving set (``filter_logits`` exposes the masking math for unit tests).
+``top_k``, ``typical_p`` and ``min_p`` are serving-stack extras (all off by
+default): filters apply in the conventional order top-k -> top-p ->
+typical-p -> min-p, each masking logits to -inf so the final categorical
+renormalizes over the surviving set (``filter_logits`` exposes the masking
+math for unit tests).  Typical-p (Meister et al. 2022, locally typical
+sampling) keeps the smallest set of tokens — ranked by closeness of their
+surprisal to the distribution's entropy — whose mass reaches ``typical_p``;
+unlike the other filters it can drop the argmax (a very peaked distribution
+makes the top token atypical), but it always keeps the most typical one.
 """
 from __future__ import annotations
 
@@ -21,6 +26,7 @@ class SamplerConfig:
     temperature: float = 0.6
     top_p: float = 0.95
     top_k: int = 0            # keep the k highest-prob tokens (0 = off)
+    typical_p: float = 1.0    # keep the most locally-typical mass (1 = off)
     min_p: float = 0.0        # drop tokens with p < min_p * max_p (0 = off)
     greedy: bool = False
 
@@ -36,12 +42,15 @@ def filter_logits(
     lf: jax.Array,            # (B, Vp) float32, temperature already applied
     cfg: SamplerConfig,
 ) -> jax.Array:
-    """Apply the top-k / top-p / min-p cutoffs as -inf masks.
+    """Apply the top-k / top-p / typical-p / min-p cutoffs as -inf masks.
 
-    Each filter keeps at least the argmax token: top-k by construction
-    (k >= 1 keeps the largest logit), top-p because the cutoff is the first
-    sorted prob reaching the mass (the max always qualifies), min-p because
-    ``max_p >= min_p * max_p`` for ``min_p <= 1``.
+    Top-k, top-p and min-p each keep at least the argmax token: top-k by
+    construction (k >= 1 keeps the largest logit), top-p because the cutoff
+    is the first sorted prob reaching the mass (the max always qualifies),
+    min-p because ``max_p >= min_p * max_p`` for ``min_p <= 1``.  Typical-p
+    keeps at least the MOST TYPICAL token (the one whose surprisal is
+    closest to the entropy) — which for a peaked distribution may not be
+    the argmax — so no filter can empty a row.
     """
     if cfg.top_k > 0 and cfg.top_k < lf.shape[-1]:
         # kth-largest logit per row (ties at the threshold all survive);
@@ -56,6 +65,21 @@ def filter_logits(
         idx = jnp.sum(cum < cfg.top_p, axis=-1, keepdims=True)   # first idx reaching p
         cutoff = jnp.take_along_axis(srt, idx, axis=-1)
         lf = jnp.where(probs >= cutoff, lf, -jnp.inf)
+    if cfg.typical_p < 1.0:
+        logp = jax.nn.log_softmax(lf, axis=-1)
+        probs = jnp.exp(logp)
+        # H = -sum p log p over the surviving set (-inf rows contribute 0)
+        ent = -jnp.sum(jnp.where(probs > 0, probs * logp, 0.0),
+                       axis=-1, keepdims=True)
+        score = jnp.abs(-logp - ent)          # masked tokens score +inf
+        order = jnp.argsort(score, axis=-1)   # most typical first
+        cum = jnp.cumsum(jnp.take_along_axis(probs, order, axis=-1), axis=-1)
+        # smallest typical set with mass >= typical_p: cutoff at the first
+        # sorted score reaching it (score ties at the cutoff all survive)
+        idx = jnp.sum(cum < cfg.typical_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(
+            jnp.take_along_axis(score, order, axis=-1), idx, axis=-1)
+        lf = jnp.where(score <= cutoff, lf, -jnp.inf)
     if cfg.min_p > 0.0:
         probs = jax.nn.softmax(lf, axis=-1)
         cutoff = cfg.min_p * probs.max(axis=-1, keepdims=True)

@@ -283,3 +283,50 @@ class PageAllocator:
         mapping live on device, aliasing reused pages."""
         self.dirty = False
         return self.table
+
+    # ------------------------------------------- page-native read indices
+    #
+    # The page-native attention path (kernels/paged_attention) reads K/V
+    # through a COMPACTED per-row page list instead of the sparse (B, NB)
+    # table: rank j of row b holds the j-th mapped logical block (ascending
+    # logical order — required: the block scan must visit blocks in the
+    # same order the ring comparator does).  The list is a pure function of
+    # ``table``, so it can never drift from the admit/retract/free
+    # bookkeeping above: every mutation goes through map_block / free_row,
+    # and the engine re-derives the buckets at each dirty push.
+
+    def mapped_counts(self) -> np.ndarray:
+        """(batch,) mapped blocks per row — the kernel's per-row loop
+        bound.  Retract never unmaps (a rewound row still owns its pages),
+        so counts only change at map_block / free_row."""
+        return (self.table != 0).sum(axis=1).astype(np.int32)
+
+    @property
+    def max_mapped_blocks(self) -> int:
+        return int(self.mapped_counts().max(initial=0))
+
+    def bucket_width(self, granule: int = 4) -> int:
+        """Static bucket width covering every row's mapped count, rounded
+        up to ``granule`` blocks so the jitted programs retrace every few
+        pages of growth instead of every page."""
+        need = max(self.max_mapped_blocks, 1)
+        return min(-(-need // granule) * granule, self.n_blocks)
+
+    def block_buckets(self, width: int) -> tuple[np.ndarray, np.ndarray,
+                                                 np.ndarray]:
+        """(pages, logical, counts): the compacted mapped-page list, padded
+        to ``width`` ranks with the trash page (identity steps)."""
+        B = self.table.shape[0]
+        pages = np.zeros((B, width), np.int32)
+        logical = np.zeros((B, width), np.int32)
+        counts = np.zeros((B,), np.int32)
+        for b in range(B):
+            blocks = np.flatnonzero(self.table[b])        # ascending logical
+            n = len(blocks)
+            if n > width:
+                raise ValueError(f"bucket width {width} < {n} mapped blocks "
+                                 f"of row {b} — size with bucket_width()")
+            pages[b, :n] = self.table[b, blocks]
+            logical[b, :n] = blocks
+            counts[b] = n
+        return pages, logical, counts

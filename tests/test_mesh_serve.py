@@ -32,7 +32,7 @@ from repro.serving.sampler import SamplerConfig
 
 assert len(jax.devices()) == 8, jax.devices()
 
-def build(ctx, delta, cache_kind="ring", proxy=False):
+def build(ctx, delta, cache_kind="ring", proxy=False, attn="gather"):
     cfg = get_config("tiny")
     model = Model(cfg, ctx, attn_impl="xla")
     params = model.init(jax.random.PRNGKey(11))   # same key => same weights
@@ -41,7 +41,7 @@ def build(ctx, delta, cache_kind="ring", proxy=False):
         pad_id=Tokens.PAD, end_think_id=Tokens.END_THINK,
         newline_id=Tokens.NEWLINE, eos_id=Tokens.EOS, chunk_len=8,
         sampler=SamplerConfig(greedy=True),
-        cache=CacheConfig(kind=cache_kind, page_size=16),
+        cache=CacheConfig(kind=cache_kind, page_size=16, attn_impl=attn),
     )
     monitor = ReasoningMonitor(
         stopper=EATStopper(alpha=0.2, delta=delta),
@@ -84,6 +84,31 @@ for delta in (1e9, 0.0):      # exit-at-first-eval AND run-to-budget regimes
                 np.testing.assert_allclose(v1, v2, atol=1e-5)
         print(f"serve delta={delta} cache={kind} equivalent "
               f"over {len(ref)} requests")
+
+# ---- page-native attention on the mesh (tiny's 2 kv heads divide the
+# model axis, so the pools shard over heads and the page list replicates):
+# mesh paged(native) must reproduce the single-device ring(native) run —
+# the per-impl paged==ring pairing holds under GSPMD too
+ref = build(local_ctx(), 0.0, attn="xla").serve(
+    b["prompts"], b["prompt_len"], jax.random.PRNGKey(0), batch_size=4,
+    max_tokens=24, answer_len=4, record_trace=True)
+out = build(make_device_ctx(4, 2), 0.0, cache_kind="paged",
+            attn="xla").serve(
+    b["prompts"], b["prompt_len"], jax.random.PRNGKey(0), batch_size=4,
+    max_tokens=24, answer_len=4, record_trace=True)
+for r, o in zip(ref, out):
+    assert r["n_reasoning"] == o["n_reasoning"], ("native", r, o)
+    assert r["exit_reason"] == o["exit_reason"], ("native", r, o)
+    assert r["ended_think"] == o["ended_think"], ("native", r, o)
+    np.testing.assert_array_equal(r["reasoning_tokens"],
+                                  o["reasoning_tokens"])
+    np.testing.assert_array_equal(r["answer_tokens"], o["answer_tokens"])
+    assert len(r["eat_trace"]) == len(o["eat_trace"]), "native"
+    for (n1, e1, v1), (n2, e2, v2) in zip(r["eat_trace"], o["eat_trace"]):
+        assert (n1, e1) == (n2, e2)
+        np.testing.assert_allclose(v1, v2, atol=1e-5)
+print(f"serve attn=page-native paged-mesh == ring-1dev over {len(ref)} "
+      f"requests")
 
 # ---- monitor="proxy" on the mesh: the generator decodes blind and a
 # same-params proxy supplies the exits — outputs must still match the

@@ -1,4 +1,5 @@
-"""Masking math for the sampler's top-k / top-p / min-p filters."""
+"""Masking math for the sampler's top-k / top-p / typical-p / min-p
+filters."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -51,6 +52,46 @@ def test_top_p_smallest_covering_set():
     lf = _lf([[2.0, 1.0, 0.0]])
     out = np.asarray(filter_logits(lf, SamplerConfig(top_p=0.7)))
     np.testing.assert_array_equal(np.isfinite(out)[0], [True, True, False])
+
+
+def test_typical_p_keeps_smallest_typical_set():
+    # uniform-ish distribution: every token is equally typical, so a high
+    # typical_p keeps the prefix of the typicality order covering the mass
+    lf = _lf([[1.0, 1.0, 1.0, 1.0]])
+    out = np.asarray(filter_logits(lf, SamplerConfig(typical_p=0.6, top_p=1.0)))
+    # |−log p − H| = 0 for ALL tokens of a uniform row: ties at the cutoff
+    # all survive (same tie rule as top-k)
+    assert np.isfinite(out).sum() == 4
+
+    # peaked distribution: probs ~ [0.843, 0.114, 0.042]; H ~ 0.52 nats.
+    # surprisals ~ [0.17, 2.17, 3.17] -> typicality order is argmax first;
+    # typical_p=0.8 is covered by the top token alone
+    lf = _lf([[3.0, 1.0, 0.0]])
+    out = np.asarray(filter_logits(lf, SamplerConfig(typical_p=0.8, top_p=1.0)))
+    np.testing.assert_array_equal(np.isfinite(out)[0], [True, False, False])
+
+
+def test_typical_p_can_drop_argmax_but_never_empties():
+    # a dominant token over a long flat tail: the tail's spread pushes the
+    # entropy far above the argmax's surprisal, so the mid-rank runner-up
+    # (surprisal ~ H) is MORE typical than the argmax — the one filter
+    # allowed to drop the top token (it keeps the most typical one instead)
+    lf = _lf([[6.0, 2.5] + [0.0] * 200])
+    out = np.asarray(filter_logits(lf, SamplerConfig(typical_p=0.01, top_p=1.0)))
+    kept = np.isfinite(out)[0]
+    assert kept.any()                       # never empty
+    assert kept[1] and not kept[0]          # runner-up is the typical one
+
+
+def test_typical_p_off_is_noop_and_respects_prior_masks():
+    lf = _lf([[2.0, 1.0, 0.0]])
+    out = np.asarray(filter_logits(lf, SamplerConfig(typical_p=1.0, top_p=1.0)))
+    assert np.isfinite(out).all()           # 1.0 = off
+    # composed after top-k: the typicality distribution is computed over
+    # the SURVIVORS, and already-masked tokens can never come back
+    cfg = SamplerConfig(top_k=2, typical_p=0.99, top_p=1.0)
+    out = np.asarray(filter_logits(_lf([[2.0, 1.0, 0.0, -1.0]]), cfg))
+    assert not np.isfinite(out[0, 2]) and not np.isfinite(out[0, 3])
 
 
 def test_filters_compose_and_never_empty_the_row():
