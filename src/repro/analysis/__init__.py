@@ -1,0 +1,64 @@
+"""repro-audit: static contract analyzer for the serving stack.
+
+Five passes, one runner (``python -m tools.audit.run``; docs/analysis.md):
+
+  layering  import-graph contracts: scheduler/request stay pure-host,
+            executor.py is the only jit-builder in serving/, kernels never
+            import serving, deleted shims stay deleted
+  keys      program-key completeness: config read by a builder closure =>
+            present in that program's cache key (executor.KEY_EXEMPT waives)
+  pallas    kernel lint: static grids/BlockSpecs, index maps free of traced
+            closures, exact-zero/neg-inf where-masking (the identity-step pin)
+  docs      no broken relative links in README.md / docs/*.md
+  lowered   lower every executor/ProxyExecutor program over the full key
+            matrix; scan jaxprs for forbidden ops; audit the donation
+            contract in the compiled artifacts
+
+Each pass returns a ``PassResult`` (``repro.analysis.common``); the passes
+themselves live in sibling modules so tests can point them at fixture trees.
+"""
+from __future__ import annotations
+
+from repro.analysis.common import PassResult, Violation
+
+__all__ = ["PassResult", "Violation", "run_passes", "PASS_NAMES"]
+
+PASS_NAMES = ("layering", "keys", "pallas", "docs", "lowered")
+
+
+def run_passes(names, repo, quick: bool = False) -> list[PassResult]:
+    """Run the selected passes over the real tree rooted at ``repo``.
+
+    ``lowered`` is imported lazily — it pulls in jax and traces programs;
+    the other four are pure-AST/filesystem and stay cheap.
+    """
+    from pathlib import Path
+
+    repo = Path(repo)
+    results = []
+    for name in names:
+        if name == "layering":
+            from repro.analysis import layering
+
+            results.append(layering.run(repo / "src"))
+        elif name == "keys":
+            from repro.analysis import keys
+
+            results.append(keys.run(repo / "src/repro/serving/executor.py"))
+        elif name == "pallas":
+            from repro.analysis import pallas_lint
+
+            results.append(pallas_lint.run(
+                sorted((repo / "src/repro/kernels").glob("*/kernel.py"))))
+        elif name == "docs":
+            from repro.analysis import docs_links
+
+            results.append(docs_links.run(repo))
+        elif name == "lowered":
+            from repro.analysis import lowered
+
+            results.append(lowered.run(quick=quick))
+        else:
+            raise ValueError(f"unknown pass {name!r} (choose from "
+                             f"{', '.join(PASS_NAMES)})")
+    return results

@@ -1,0 +1,38 @@
+"""Shared result types for the analysis passes (docs/analysis.md)."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One contract breach: where it is, which rule, and what happened."""
+
+    pass_name: str
+    where: str          # file:line, module name, or program key
+    rule: str           # short machine-stable rule id, e.g. "pure-host"
+    detail: str         # human explanation
+
+    def __str__(self) -> str:
+        return f"[{self.pass_name}/{self.rule}] {self.where}: {self.detail}"
+
+
+@dataclasses.dataclass
+class PassResult:
+    """Outcome of one pass: violations plus the coverage it can attest to."""
+
+    name: str
+    violations: list
+    stats: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "ok": self.ok,
+            "stats": self.stats,
+            "violations": [dataclasses.asdict(v) for v in self.violations],
+        }

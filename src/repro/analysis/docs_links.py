@@ -1,0 +1,60 @@
+"""Pass 5 — docs link check (folded in from ``tools/check_docs_links.py``).
+
+Every markdown inline link ``[text](target)`` in README.md and docs/*.md:
+
+  * http(s)/mailto targets are skipped (no network in CI);
+  * pure-anchor targets (``#section``) are skipped;
+  * everything else must resolve to an existing file or directory relative
+    to the file containing the link (``#anchor`` suffixes stripped first).
+
+The old ``tools/check_docs_links.py`` CLI survives as a thin shim over
+this module.
+"""
+from __future__ import annotations
+
+import re
+from pathlib import Path
+
+from repro.analysis.common import PassResult, Violation
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def doc_files(repo: Path) -> list[Path]:
+    files = [repo / "README.md"]
+    files += sorted((repo / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check(repo: Path, path: Path) -> tuple[list[Violation], int]:
+    violations, n_links = [], 0
+    text = path.read_text(encoding="utf-8")
+    for lineno, line in enumerate(text.splitlines(), 1):
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            n_links += 1
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (path.parent / rel).resolve().exists():
+                violations.append(Violation(
+                    "docs", f"{path.relative_to(repo)}:{lineno}",
+                    "broken-link", f"target does not exist: {target}"))
+    return violations, n_links
+
+
+def run(repo, files=None) -> PassResult:
+    repo = Path(repo)
+    files = list(files) if files is not None else doc_files(repo)
+    violations: list[Violation] = []
+    n_links = 0
+    for f in files:
+        v, n = check(repo, f)
+        violations += v
+        n_links += n
+    return PassResult("docs", violations, {
+        "files": len(files), "links": n_links,
+    })

@@ -1,0 +1,285 @@
+"""Pass 3 — program-key completeness lint (the stale-program hazard).
+
+Executor program builders follow one shape::
+
+    def family_program(self, state, knob):
+        key = ("family", ..., knob, self._kind(state.cache))
+        if key not in self._programs:
+            def fn(...):
+                ... closes over knob / self attributes ...
+            self._programs[key] = jax.jit(fn, donate_argnums=...)
+        return self._programs[key]
+
+``jax.jit`` retraces automatically on shape/pytree changes, so the ONLY
+silent-staleness vector is a *static Python value baked into the closure*
+(or into the jit call itself, e.g. ``donate_argnums``) that is not part of
+``key``: two calls with different knob values would then be served the same
+cached program.  This is exactly the hazard class the ``attn_impl`` knob of
+PR 5 had to plumb by hand through every key (``Executor._kind``).
+
+The lint finds every builder (a method that assigns a ``key`` tuple and
+stores into ``self._programs[key]``) and checks, per builder:
+
+  key-param   a method parameter read (transitively) by the jitted
+              closure, or by a non-sharding ``jax.jit`` argument, must
+              appear in the key tuple;
+  key-shape   a local derived from a ``.shape`` / ``len()`` read that the
+              closure captures must appear in the key tuple;
+  key-kind    a closure that reaches instance state (``self.*`` — in
+              particular the model and its decode-attention impl) while
+              the builder takes a cache/state template must carry
+              ``self._kind(...)`` in its key.
+
+Names rooted at ``self`` are otherwise allowed: an ``Executor`` is
+immutable per (model, EngineConfig, monitor) by contract.  ``in_shardings``
+/ ``out_shardings`` are excluded: sharding trees depend only on pytree
+structure, and a structure mismatch fails loudly at dispatch instead of
+serving a stale program.  A family listed in the module's ``KEY_EXEMPT``
+dict literal is waived (the waiver text is the justification — see
+``serving/executor.py``).
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from repro.analysis.common import PassResult, Violation
+
+_SHARDING_KWARGS = ("in_shardings", "out_shardings")
+_SHAPE_ATTRS = ("shape", "ndim", "dtype")
+
+
+def _params_of(fn) -> list[str]:
+    a = fn.args
+    names = [x.arg for x in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+def free_names(fn) -> set:
+    """Free variable names of a function/lambda: loads not bound by its
+    params or local assignments, including frees of nested defs.  Default
+    expressions of nested functions evaluate in THIS scope and count."""
+    bound = set(_params_of(fn))
+    assigned, loads, nested = set(), set(), []
+
+    def visit(node):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            assigned.add(node.name)
+            nested.append(node)
+            for d in node.args.defaults + [d for d in node.args.kw_defaults
+                                           if d is not None]:
+                visit(d)
+            return
+        if isinstance(node, ast.Lambda):
+            nested.append(node)
+            for d in node.args.defaults + [d for d in node.args.kw_defaults
+                                           if d is not None]:
+                visit(d)
+            return
+        if isinstance(node, ast.Name):
+            (loads if isinstance(node.ctx, ast.Load) else assigned).add(node.id)
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    for stmt in body:
+        visit(stmt)
+    free = loads - assigned - bound
+    for sub in nested:
+        free |= free_names(sub) - assigned - bound
+    return free
+
+
+class _Builder:
+    """One discovered builder method plus its dataflow facts."""
+
+    def __init__(self, cls_name: str, method: ast.FunctionDef):
+        self.cls = cls_name
+        self.method = method
+        self.params = [p for p in _params_of(method) if p != "self"]
+        self.taint: dict = {}      # local name -> set of tokens
+        self.funcdefs: dict = {}   # local def/lambda name -> [nodes]
+        self.key_tuple = None
+        self.jit_calls: list = []
+        self._scan()
+
+    # tokens: ("param", name) | ("self",) | ("shape",)
+    def _expr_tokens(self, expr) -> set:
+        toks = set()
+        for n in ast.walk(expr):
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load):
+                if n.id == "self":
+                    toks.add(("self",))
+                elif n.id in self.params:
+                    toks.add(("param", n.id))
+                elif n.id in self.taint:
+                    toks |= self.taint[n.id]
+            elif isinstance(n, ast.Attribute) and n.attr in _SHAPE_ATTRS:
+                toks.add(("shape",))
+            elif (isinstance(n, ast.Call) and isinstance(n.func, ast.Name)
+                  and n.func.id == "len"):
+                toks.add(("shape",))
+        return toks
+
+    def _scan(self):
+        for node in ast.walk(self.method):
+            if isinstance(node, ast.Assign):
+                toks = self._expr_tokens(node.value)
+                for tgt in node.targets:
+                    names = ([tgt] if isinstance(tgt, ast.Name)
+                             else [e for e in ast.walk(tgt)
+                                   if isinstance(e, ast.Name)])
+                    for nm in names:
+                        if isinstance(nm.ctx, ast.Store):
+                            self.taint.setdefault(nm.id, set())
+                            self.taint[nm.id] |= toks
+                    if isinstance(tgt, ast.Name) and tgt.id == "key" \
+                            and isinstance(node.value, ast.Tuple):
+                        self.key_tuple = node.value
+                    if isinstance(tgt, ast.Name) \
+                            and isinstance(node.value, ast.Lambda):
+                        self.funcdefs.setdefault(tgt.id, []).append(node.value)
+            elif isinstance(node, ast.FunctionDef) and node is not self.method:
+                self.funcdefs.setdefault(node.name, []).append(node)
+            elif isinstance(node, ast.Call):
+                f = node.func
+                if (isinstance(f, ast.Attribute) and f.attr in ("jit", "pjit")
+                        and isinstance(f.value, ast.Name)
+                        and f.value.id == "jax"):
+                    self.jit_calls.append(node)
+
+    # ------------------------------------------------------------- analysis
+    def key_names(self) -> set:
+        return {n.id for n in ast.walk(self.key_tuple)
+                if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)}
+
+    def key_has_kind(self) -> bool:
+        return any(isinstance(n, ast.Call)
+                   and isinstance(n.func, ast.Attribute)
+                   and n.func.attr == "_kind"
+                   for n in ast.walk(self.key_tuple))
+
+    def family(self):
+        first = self.key_tuple.elts[0] if self.key_tuple.elts else None
+        return first.value if isinstance(first, ast.Constant) else None
+
+    def examined_names(self) -> set:
+        """Names whose values are baked into the jitted program: the
+        closure's free variables plus non-sharding jit arguments."""
+        out = set()
+        for call in self.jit_calls:
+            if call.args:
+                fnarg = call.args[0]
+                if isinstance(fnarg, ast.Lambda):
+                    out |= free_names(fnarg)
+                elif isinstance(fnarg, ast.Name):
+                    if fnarg.id in self.funcdefs:
+                        for d in self.funcdefs[fnarg.id]:
+                            out |= free_names(d)
+                    else:
+                        out.add(fnarg.id)
+            for kw in call.keywords:
+                if kw.arg in _SHARDING_KWARGS:
+                    continue
+                out |= {n.id for n in ast.walk(kw.value)
+                        if isinstance(n, ast.Name)
+                        and isinstance(n.ctx, ast.Load)}
+        return out
+
+    def resolve(self, name: str, seen=None) -> set:
+        """Tokens a free name ultimately depends on."""
+        seen = seen or set()
+        if name in seen:
+            return set()
+        seen.add(name)
+        if name == "self":
+            return {("self",)}
+        if name in self.params:
+            return {("param", name)}
+        toks = set(self.taint.get(name, set()))
+        if name in self.funcdefs:
+            for d in self.funcdefs[name]:
+                for sub in free_names(d):
+                    toks |= self.resolve(sub, seen)
+        return toks
+
+
+def _cachey(param: str) -> bool:
+    return ("cache" in param or param.endswith("state")
+            or param in ("state", "one", "pstate"))
+
+
+def _module_exempt(tree: ast.Module) -> dict:
+    """The scanned module's own ``KEY_EXEMPT = {...}`` literal (no import —
+    the pass must work on fixture files that cannot be imported)."""
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == "KEY_EXEMPT" \
+                        and isinstance(node.value, ast.Dict):
+                    return {k.value: True for k in node.value.keys
+                            if isinstance(k, ast.Constant)}
+    return {}
+
+
+def run(path, exempt: dict | None = None) -> PassResult:
+    path = Path(path)
+    tree = ast.parse(path.read_text(encoding="utf-8"))
+    if exempt is None:
+        exempt = _module_exempt(tree)
+    violations: list[Violation] = []
+    builders: list[_Builder] = []
+
+    for cls in [n for n in ast.walk(tree) if isinstance(n, ast.ClassDef)]:
+        for meth in [n for n in cls.body if isinstance(n, ast.FunctionDef)]:
+            # a builder both assigns a ``key`` tuple and stores a program
+            has_store = any(
+                isinstance(n, ast.Subscript)
+                and isinstance(n.ctx, ast.Store)
+                and isinstance(n.value, ast.Attribute)
+                and n.value.attr == "_programs"
+                for n in ast.walk(meth))
+            b = _Builder(cls.name, meth)
+            if b.key_tuple is None or not has_store:
+                continue
+            builders.append(b)
+
+            where = f"{path.name}:{meth.lineno} {cls.name}.{meth.name}"
+            family = b.family()
+            if family in exempt:
+                continue
+            knames = b.key_names()
+            self_derived = False
+            for name in sorted(b.examined_names()):
+                for tok in b.resolve(name):
+                    if tok == ("self",):
+                        self_derived = True
+                    elif tok[0] == "param" and tok[1] not in knames:
+                        violations.append(Violation(
+                            "keys", where, "key-param",
+                            f"builder bakes parameter '{tok[1]}' (via "
+                            f"'{name}') into the program but '{tok[1]}' is "
+                            f"not in the cache key"))
+                if ("shape",) in b.taint.get(name, set()) \
+                        and name not in knames:
+                    violations.append(Violation(
+                        "keys", where, "key-shape",
+                        f"shape-derived '{name}' is baked into the program "
+                        f"but missing from the cache key"))
+            if self_derived and any(_cachey(p) for p in b.params) \
+                    and not b.key_has_kind():
+                violations.append(Violation(
+                    "keys", where, "key-kind",
+                    "closure reaches instance state over a cache/state "
+                    "template but the key has no self._kind(...) component "
+                    "(add it or list the family in KEY_EXEMPT)"))
+
+    return PassResult("keys", violations, {
+        "builders": len(builders),
+        "exempt": sorted(exempt),
+        "file": str(path),
+    })

@@ -1,0 +1,135 @@
+"""Pass 1 — import-layering (docs/architecture.md §Layer contracts).
+
+Pure-AST checks over the import graph and jit-construction sites:
+
+  * ``pure_host`` modules (scheduler, request — and with them the
+    ``PageAllocator``) never import jax: every scheduling decision stays a
+    host list/numpy operation, unit-testable without a device;
+  * within the ``jit_scope`` package (serving/), only the ``jit_owner``
+    module (executor.py) constructs jitted programs — ``jax.jit`` /
+    ``pjit`` references anywhere else are flagged (this is how the
+    ProxyMonitor jit sites were caught and moved in this PR);
+  * ``kernel_pkg`` modules never import from ``app_pkg`` (kernels are
+    leaves; a kernel reaching up into serving/ would invert the stack);
+  * ``banned_paths`` stay deleted (the ``launch/serve_step.py`` shim).
+
+Rules are data so tests can run the pass over fixture trees.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from repro.analysis.common import PassResult, Violation
+
+DEFAULT_RULES = {
+    "pure_host": ("repro.serving.scheduler", "repro.serving.request"),
+    "pure_host_forbidden": ("jax", "jaxlib"),
+    "jit_owner": "repro.serving.executor",
+    "jit_scope": "repro.serving",
+    "kernel_pkg": "repro.kernels",
+    "app_pkg": "repro.serving",
+    "banned_paths": ("repro/launch/serve_step.py",),
+}
+
+
+def module_name(src_root: Path, path: Path) -> str:
+    rel = path.relative_to(src_root).with_suffix("")
+    parts = list(rel.parts)
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def imports_of(tree: ast.Module, modname: str) -> list[tuple[str, int]]:
+    """All imported module names (absolute, relative resolved), with lines."""
+    out = []
+    pkg_parts = modname.split(".")[:-1]
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            out += [(a.name, node.lineno) for a in node.names]
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:
+                base = pkg_parts[:len(pkg_parts) - node.level + 1]
+                mod = ".".join(base + ([node.module] if node.module else []))
+            else:
+                mod = node.module or ""
+            out.append((mod, node.lineno))
+            # ``from pkg import sub`` may bind submodules; record those too
+            out += [(f"{mod}.{a.name}", node.lineno) for a in node.names]
+    return out
+
+
+def jit_sites(tree: ast.Module) -> list[int]:
+    """Lines referencing ``jax.jit`` / ``pjit`` — any load, not just calls,
+    so aliasing (``jit = jax.jit``) and ``functools.partial(jax.jit, ...)``
+    are caught as well."""
+    lines = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) and node.attr in ("jit", "pjit"):
+            base = node.value
+            if isinstance(base, ast.Name) and base.id == "jax":
+                lines.append(node.lineno)
+            elif isinstance(base, ast.Attribute):        # jax.experimental.pjit
+                lines.append(node.lineno)
+        elif isinstance(node, ast.Name) and node.id == "pjit":
+            lines.append(node.lineno)
+    return lines
+
+
+def _imports_root(name: str, roots: tuple) -> bool:
+    return any(name == r or name.startswith(r + ".") for r in roots)
+
+
+def run(src_root, rules: dict | None = None) -> PassResult:
+    src_root = Path(src_root)
+    rules = {**DEFAULT_RULES, **(rules or {})}
+    violations: list[Violation] = []
+    n_modules = 0
+
+    for path in sorted(src_root.rglob("*.py")):
+        mod = module_name(src_root, path)
+        if not mod:
+            continue
+        n_modules += 1
+        tree = ast.parse(path.read_text(encoding="utf-8"))
+        imps = imports_of(tree, mod)
+
+        if mod in rules["pure_host"]:
+            for name, line in imps:
+                if _imports_root(name, tuple(rules["pure_host_forbidden"])):
+                    violations.append(Violation(
+                        "layering", f"{mod}:{line}", "pure-host",
+                        f"pure-host module imports {name} — scheduling "
+                        f"decisions must stay device-free"))
+
+        scope = rules["jit_scope"]
+        if (mod == scope or mod.startswith(scope + ".")) \
+                and mod != rules["jit_owner"]:
+            for line in jit_sites(tree):
+                violations.append(Violation(
+                    "layering", f"{mod}:{line}", "executor-only-jit",
+                    f"jit program construction outside {rules['jit_owner']} "
+                    f"— all serving programs are built by the executor"))
+
+        kpkg = rules["kernel_pkg"]
+        if mod == kpkg or mod.startswith(kpkg + "."):
+            for name, line in imps:
+                if _imports_root(name, (rules["app_pkg"],)):
+                    violations.append(Violation(
+                        "layering", f"{mod}:{line}", "kernels-are-leaves",
+                        f"kernel module imports {name} — kernels must not "
+                        f"depend on the serving stack"))
+
+    for banned in rules["banned_paths"]:
+        if (src_root / banned).exists():
+            violations.append(Violation(
+                "layering", banned, "stays-deleted",
+                "deprecated shim has been reintroduced"))
+
+    return PassResult("layering", violations, {
+        "modules": n_modules,
+        "rules": 4,
+        "pure_host": list(rules["pure_host"]),
+        "jit_owner": rules["jit_owner"],
+    })

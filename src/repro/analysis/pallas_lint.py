@@ -1,0 +1,223 @@
+"""Pass 4 — Pallas kernel lint (docs/kernels.md invariants).
+
+Three structural invariants every kernel wrapper in ``repro/kernels/*`` must
+hold, checked over the AST without importing jax:
+
+  index-map-closure  BlockSpec index maps must be pure functions of the
+                     grid indices and scalar-prefetch refs (their lambda
+                     parameters) plus *static* values — block sizes, head
+                     ratios (``g = Hq // Hkv``), module constants.  A map
+                     that closes over a traced array would silently bake
+                     one trace's data into the block schedule.
+  static-grid/block  ``grid=`` tuples and BlockSpec block shapes must be
+                     built from static expressions (shapes, int-annotated
+                     params, ``pl.cdiv`` of those) — a traced grid is a
+                     recompile-per-step hazard and unmappable on TPU.
+  where-mask         float fill values in ``jnp.where`` masking must be an
+                     exact ``0.0`` (identity-step accumulators: masked
+                     lanes contribute *bit-exact* zero, the property the
+                     paged/ring equivalence tests rely on) or a -inf-like
+                     constant (softmax masking, magnitude >= 1e20 so the
+                     exp underflows to exactly 0).  ``-1e9``-style "large
+                     enough" fills are flagged: they leave nonzero
+                     probability mass and break bit-exactness.
+
+Statics are inferred per wrapper function by fixpoint: int/bool-annotated
+or int-defaulted params, ``.shape``/``.ndim``/``len()`` reads, module-level
+constants/imports, and arithmetic/subscripts/``pl.cdiv`` over those.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from repro.analysis.common import PassResult, Violation
+from repro.analysis.keys import free_names
+
+_STATIC_CALLS = ("len", "int", "min", "max", "sum", "abs", "round", "divmod")
+_NEG_INF_MIN = 1e20
+
+
+def _module_statics(tree: ast.Module) -> set:
+    """Top-level names: imports, constants, defs — all trace-independent."""
+    out = set(dir(__builtins__)) if isinstance(__builtins__, dict) is False \
+        else set(__builtins__)
+    out |= {"True", "False", "None"}
+    for node in tree.body:
+        if isinstance(node, ast.Import):
+            out |= {(a.asname or a.name).split(".")[0] for a in node.names}
+        elif isinstance(node, ast.ImportFrom):
+            out |= {a.asname or a.name for a in node.names}
+        elif isinstance(node, ast.Assign):
+            out |= {t.id for t in node.targets if isinstance(t, ast.Name)}
+        elif isinstance(node, (ast.FunctionDef, ast.ClassDef)):
+            out.add(node.name)
+    return out
+
+
+def _is_static(expr, static: set) -> bool:
+    if isinstance(expr, ast.Constant):
+        return True
+    if isinstance(expr, ast.Name):
+        return expr.id in static
+    if isinstance(expr, ast.Attribute):
+        if expr.attr in ("shape", "ndim", "dtype", "size"):
+            return True
+        return _is_static(expr.value, static)
+    if isinstance(expr, (ast.Tuple, ast.List)):
+        return all(_is_static(e, static) for e in expr.elts)
+    if isinstance(expr, ast.BinOp):
+        return _is_static(expr.left, static) and _is_static(expr.right, static)
+    if isinstance(expr, ast.UnaryOp):
+        return _is_static(expr.operand, static)
+    if isinstance(expr, ast.BoolOp):
+        return all(_is_static(v, static) for v in expr.values)
+    if isinstance(expr, ast.Compare):
+        return _is_static(expr.left, static) and \
+            all(_is_static(c, static) for c in expr.comparators)
+    if isinstance(expr, ast.Subscript):
+        return _is_static(expr.value, static) and \
+            _is_static(expr.slice, static)
+    if isinstance(expr, ast.Slice):
+        return all(s is None or _is_static(s, static)
+                   for s in (expr.lower, expr.upper, expr.step))
+    if isinstance(expr, ast.IfExp):
+        return all(_is_static(e, static)
+                   for e in (expr.test, expr.body, expr.orelse))
+    if isinstance(expr, ast.Call):
+        f = expr.func
+        callable_ok = (isinstance(f, ast.Name) and f.id in _STATIC_CALLS) \
+            or (isinstance(f, ast.Attribute) and _is_static(f.value, static))
+        return callable_ok \
+            and all(_is_static(a, static) for a in expr.args) \
+            and all(_is_static(k.value, static) for k in expr.keywords)
+    return False
+
+
+def _fn_statics(fn: ast.FunctionDef, module_static: set) -> set:
+    static = set(module_static)
+    args = fn.args
+    all_args = args.posonlyargs + args.args + args.kwonlyargs
+    # params annotated int/bool, or defaulted to an int/bool literal
+    defaults = [None] * (len(args.posonlyargs) + len(args.args)
+                         - len(args.defaults)) + list(args.defaults)
+    defaults += list(args.kw_defaults)
+    for a, d in zip(all_args, defaults):
+        ann_static = isinstance(a.annotation, ast.Name) \
+            and a.annotation.id in ("int", "bool")
+        dflt_static = isinstance(d, ast.Constant) \
+            and isinstance(d.value, (int, bool)) \
+            and not isinstance(d.value, float)
+        if ann_static or dflt_static:
+            static.add(a.arg)
+    # fixpoint over assignments: statics propagate through unpacking
+    changed = True
+    while changed:
+        changed = False
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Assign):
+                continue
+            if _is_static(node.value, static):
+                for tgt in node.targets:
+                    for nm in ast.walk(tgt):
+                        if isinstance(nm, ast.Name) and nm.id not in static:
+                            static.add(nm.id)
+                            changed = True
+    return static
+
+
+def _lambda_default_names(lam: ast.Lambda) -> list:
+    return [d for d in lam.args.defaults + [d for d in lam.args.kw_defaults
+                                            if d is not None]]
+
+
+def _check_block_spec(call, static, where, out):
+    """One ``pl.BlockSpec(...)`` call: index-map lambda purity + static
+    block shape (positional order varies across jax versions — classify by
+    node type instead)."""
+    operands = list(call.args) + [k.value for k in call.keywords]
+    for op in operands:
+        if isinstance(op, ast.Lambda):
+            for name in sorted(free_names(op)):
+                if name not in static:
+                    out.append(Violation(
+                        "pallas", f"{where}:{op.lineno}", "index-map-closure",
+                        f"index map closes over non-static '{name}' — index "
+                        f"maps must be pure functions of grid indices, "
+                        f"scalar-prefetch refs and static sizes"))
+            for d in _lambda_default_names(op):
+                if not _is_static(d, static):
+                    out.append(Violation(
+                        "pallas", f"{where}:{op.lineno}", "index-map-closure",
+                        "index-map lambda default is not a static "
+                        "expression"))
+        elif isinstance(op, (ast.Tuple, ast.List)):
+            if not _is_static(op, static):
+                out.append(Violation(
+                    "pallas", f"{where}:{op.lineno}", "static-block",
+                    "BlockSpec block shape contains a non-static element"))
+
+
+def _check_fn(fn, module_static, fname, out) -> dict:
+    static = _fn_statics(fn, module_static)
+    counts = {"pallas_calls": 0, "index_maps": 0, "wheres": 0}
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        callee = f.attr if isinstance(f, ast.Attribute) else \
+            (f.id if isinstance(f, ast.Name) else "")
+        where = f"{fname}:{node.lineno}"
+
+        if callee in ("pallas_call", "PrefetchScalarGridSpec"):
+            counts["pallas_calls"] += callee == "pallas_call"
+            for kw in node.keywords:
+                if kw.arg == "grid" and not _is_static(kw.value, static):
+                    out.append(Violation(
+                        "pallas", where, "static-grid",
+                        "grid is not a static expression of shapes and "
+                        "int params"))
+        elif callee == "BlockSpec":
+            counts["index_maps"] += any(
+                isinstance(op, ast.Lambda)
+                for op in list(node.args) + [k.value for k in node.keywords])
+            _check_block_spec(node, static, fname, out)
+        elif callee == "where":
+            if len(node.args) == 3:
+                counts["wheres"] += 1
+                fill = node.args[2]
+                bad = None
+                if isinstance(fill, ast.Constant) \
+                        and isinstance(fill.value, float) \
+                        and fill.value != 0.0:
+                    bad = fill.value
+                elif isinstance(fill, ast.UnaryOp) \
+                        and isinstance(fill.op, ast.USub) \
+                        and isinstance(fill.operand, ast.Constant) \
+                        and isinstance(fill.operand.value, (int, float)) \
+                        and abs(fill.operand.value) < _NEG_INF_MIN:
+                    bad = -fill.operand.value
+                if bad is not None:
+                    out.append(Violation(
+                        "pallas", where, "where-mask",
+                        f"masking fill {bad!r} is neither exact 0.0 nor a "
+                        f"-inf-like constant (|x| >= {_NEG_INF_MIN:g}) — "
+                        f"masked lanes must contribute bit-exact zero"))
+    return counts
+
+
+def run(paths) -> PassResult:
+    violations: list[Violation] = []
+    stats = {"files": 0, "pallas_calls": 0, "index_maps": 0, "wheres": 0}
+    for path in paths:
+        path = Path(path)
+        stats["files"] += 1
+        tree = ast.parse(path.read_text(encoding="utf-8"))
+        module_static = _module_statics(tree)
+        rel = "/".join(path.parts[-3:])
+        for node in ast.walk(tree):
+            if isinstance(node, ast.FunctionDef):
+                c = _check_fn(node, module_static, rel, violations)
+                for k, v in c.items():
+                    stats[k] += v
+    return PassResult("pallas", violations, stats)

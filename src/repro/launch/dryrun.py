@@ -1,11 +1,17 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+if __name__ == "__main__":
+    # only when executed as a script: the analysis passes (tools/audit)
+    # import this module for its lowering helpers and must not have their
+    # process's device topology rewritten underneath them
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 """Multi-pod dry-run: lower + compile every (architecture x input shape) on
 the production meshes and extract the roofline terms.
 
-MUST be run as its own process (``python -m repro.launch.dryrun``): the two
+MUST be run as its own process (``python -m repro.launch.dryrun``): the
 lines above run before any other import so the 512 placeholder host devices
-exist before jax initializes.
+exist before jax initializes (``runpy`` executes the module body with
+``__name__ == "__main__"``, so the guard still fires ahead of the jax
+import below).
 
 Per (arch, shape, mesh):
   * train_4k     -> full train_step (fwd+bwd+AdamW) with FSDP+TP shardings
@@ -262,6 +268,13 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str | None,
         cost = cost_analysis_dict(compiled)
         hlo = compiled.as_text()
         coll = parse_collective_bytes(hlo)
+        # same sync-point screen the serving programs get (tools/audit):
+        # a host callback in the costed program would invalidate the
+        # roofline numbers the dry-run exists to produce
+        from repro.analysis.lowered import scan_hlo_text
+
+        rec["sync_points"] = [str(v) for v in scan_hlo_text(
+            hlo, f"{arch}/{shape_name}")]
 
         # ---- unrolled cost probes (XLA counts scan bodies once; extract
         # per-layer costs from two small unrolled depths and extrapolate

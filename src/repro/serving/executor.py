@@ -86,6 +86,46 @@ from repro.sharding.partition import (
 )
 
 
+# --------------------------------------------------------------------------
+# The program-store contract, exported for the static analyzer
+# (src/repro/analysis/, docs/analysis.md).  tools/audit enumerates every
+# builder across the full key matrix and checks these against the compiled
+# artifacts — keep them in sync with the builders below.
+# --------------------------------------------------------------------------
+
+#: Every program family a serving run can dispatch, by key[0].
+PROGRAM_FAMILIES = ("chunk", "decode", "prefill", "probe", "admit", "pack",
+                    "retract", "rollout", "shadow")
+
+#: family -> donated argument index (None = deliberately functional).  The
+#: donation audit asserts input/output aliasing in the compiled artifact for
+#: every donating program and its ABSENCE for the functional ones ("chunk"
+#: keys carry an explicit donate flag at key[3]; the audit honours it).
+DONATION_CONTRACT = {
+    "chunk": 1,       # ServeState
+    "decode": None,   # benchmarks re-time it against one fixed state
+    "prefill": 4,     # the freshly allocated cache
+    "probe": None,    # the probe must not consume the live cache
+    "admit": 0,       # the resident batch state (ring AND paged variants)
+    "pack": 0,        # the paged template
+    "retract": 0,     # ServeState
+    "rollout": None,  # functional read of a live cache
+    "shadow": 1,      # the proxy's ServeState
+}
+
+#: Families waived from the program-key completeness lint, with the reason.
+#: A waiver is a claim that the un-keyed inputs cannot silently change the
+#: traced program: prefill always runs over a dense cache (paged serves
+#: prefill dense, then ``pack_paged`` scatters), so the cache kind / decode
+#: attention impl never reach its graph, and a pytree-structure change in
+#: the cache argument retraces (or fails loudly on a mesh) rather than
+#: serving a stale program.
+KEY_EXEMPT = {
+    "prefill": "dense prompt prefill; cache kind/attn impl never reach the "
+               "traced graph, structure changes retrace",
+}
+
+
 def cache_kind(cache: dict) -> str:
     """'paged' when the cache routes K/V through a page table, else 'ring'.
     Program-cache keys include this: the two kinds have different pytree
@@ -290,6 +330,40 @@ def build_serve_step_program(model: Model, scfg: ServeStepConfig,
     return jax.jit(serve_step, in_shardings=in_sh, donate_argnums=1), mon_struct
 
 
+def build_stream_monitor_programs(model: Model, probe: ProbeSpec):
+    """Jitted programs for the host-streaming ``ProxyMonitor``
+    (serving/proxy.py): ``(consume, probe_fn, prefill)``.
+
+    ``consume(params, cache, tokens, next_pos)`` prefills an arriving chunk
+    into the monitor's cache; ``probe_fn(params, cache, next_pos)`` is the
+    non-committing EAT evaluation; ``prefill`` is the plain prompt prefill
+    (re-traced per prompt shape by jit's signature cache).  Built here so
+    proxy.py stays a host-orchestration layer — the executor module is the
+    only place in ``serving/`` that constructs jitted programs (the
+    layering contract checked by tools/audit)."""
+
+    def _positions(pos1d):
+        return positions_for(model.cfg, pos1d)
+
+    @jax.jit
+    def consume(params, cache, tokens, next_pos):
+        B, m = tokens.shape
+        pos1d = next_pos[:, None] + jnp.arange(m, dtype=jnp.int32)[None]
+        _, cache = model.prefill(params, tokens, _positions(pos1d), pos1d,
+                                 cache)
+        return cache, next_pos + m
+
+    @jax.jit
+    def probe_fn(params, cache, next_pos):
+        return eval_eat(model, params, cache, probe, next_pos)
+
+    @jax.jit
+    def prefill(params, prompts, positions, pos1d, cache):
+        return model.prefill(params, prompts, positions, pos1d, cache)
+
+    return consume, probe_fn, prefill
+
+
 # --------------------------------------------------------------------------
 # Executor: the engine-facing program store
 # --------------------------------------------------------------------------
@@ -381,8 +455,8 @@ class Executor:
             out_len=state.out_len + inc,
         )
 
-    def _chunk_program(self, state: ServeState, use_monitor: bool,
-                       donate: bool = True):
+    def chunk_program(self, state: ServeState, use_monitor: bool,
+                      donate: bool = True):
         # ``donate=False`` exists ONLY for the donation audit
         # (tests/test_executor.py), which A/Bs the compiled memory stats of
         # the same program with and without the in-place cache alias.
@@ -424,15 +498,11 @@ class Executor:
                      *, use_monitor: bool = True) -> ServeState:
         """Advance up to ``chunk_len`` monitored tokens in ONE dispatch
         (``lax.while_loop`` over the EAT step).  DONATES ``state``."""
-        return self._chunk_program(state, use_monitor)(
+        return self.chunk_program(state, use_monitor)(
             params, state, budget, chunk_len
         )
 
-    def decode_step(self, params, state: ServeState) -> ServeState:
-        """One unmonitored decode step — ``_advance`` with no budget.  The
-        per-token baseline for ``benchmarks/engine_throughput.py`` and unit
-        tests (so the two paths can never diverge).  No donation: the
-        benchmarks re-time it against one fixed state."""
+    def decode_program(self, state: ServeState):
         key = ("decode", int(state.active.shape[0]), self._kind(state.cache))
         if key not in self._programs:
             def fn(params, st: ServeState):
@@ -446,22 +516,26 @@ class Executor:
                 jitted = jax.jit(fn, in_shardings=(self._param_sh, ssh),
                                  out_shardings=ssh)
             self._programs[key] = jitted
-        return self._programs[key](params, state)
+        return self._programs[key]
 
-    def prefill(self, params, tokens, positions, pos1d, cache, *,
-                frames=None, image_embeds=None):
-        """Prompt prefill; returns (hidden, cache).  DONATES ``cache`` (the
-        engine always hands it a freshly allocated one)."""
-        B = int(tokens.shape[0])
-        key = ("prefill", B, frames is not None, image_embeds is not None)
+    def decode_step(self, params, state: ServeState) -> ServeState:
+        """One unmonitored decode step — ``_advance`` with no budget.  The
+        per-token baseline for ``benchmarks/engine_throughput.py`` and unit
+        tests (so the two paths can never diverge).  No donation: the
+        benchmarks re-time it against one fixed state."""
+        return self.decode_program(state)(params, state)
+
+    def prefill_program(self, cache, B: int, has_frames: bool = False,
+                        has_image: bool = False):
+        key = ("prefill", B, has_frames, has_image)
         if key not in self._programs:
             model = self.model
 
-            if frames is not None:
+            if has_frames:
                 def fn(params, tokens, positions, pos1d, cache, frames):
                     return model.prefill(params, tokens, positions, pos1d,
                                          cache, frames=frames)
-            elif image_embeds is not None:
+            elif has_image:
                 def fn(params, tokens, positions, pos1d, cache, image_embeds):
                     return model.prefill(params, tokens, positions, pos1d,
                                          cache, image_embeds=image_embeds)
@@ -483,19 +557,25 @@ class Executor:
                     self._ns(P(b, None)),
                     self._sh(cache_pspecs(self.cfg, self.ctx, cache)),
                 ]
-                if frames is not None or image_embeds is not None:
+                if has_frames or has_image:
                     in_sh.append(self._ns(P(b, None, None)))
                 jitted = jax.jit(fn, in_shardings=tuple(in_sh),
                                  donate_argnums=4)
             self._programs[key] = jitted
-        extras = [x for x in (frames, image_embeds) if x is not None]
-        return self._programs[key](params, tokens, positions, pos1d, cache,
-                                   *extras)
+        return self._programs[key]
 
-    def probe(self, params, cache, next_pos):
-        """Non-committing EAT probe over the live cache.  Never donated —
-        the whole point is that the cache survives the evaluation."""
-        key = ("probe", int(next_pos.shape[0]), self._kind(cache))
+    def prefill(self, params, tokens, positions, pos1d, cache, *,
+                frames=None, image_embeds=None):
+        """Prompt prefill; returns (hidden, cache).  DONATES ``cache`` (the
+        engine always hands it a freshly allocated one)."""
+        prog = self.prefill_program(cache, int(tokens.shape[0]),
+                                    frames is not None,
+                                    image_embeds is not None)
+        extras = [x for x in (frames, image_embeds) if x is not None]
+        return prog(params, tokens, positions, pos1d, cache, *extras)
+
+    def probe_program(self, cache, B: int):
+        key = ("probe", B, self._kind(cache))
         if key not in self._programs:
             model, monitor = self.model, self.monitor
 
@@ -505,21 +585,23 @@ class Executor:
             if self.ctx.mesh is None:
                 jitted = jax.jit(fn)
             else:
-                b = self._batch_entry(int(next_pos.shape[0]))
+                b = self._batch_entry(B)
                 jitted = jax.jit(fn, in_shardings=(
                     self._param_sh,
                     self._sh(cache_pspecs(self.cfg, self.ctx, cache)),
                     self._ns(P(b)),
                 ))
             self._programs[key] = jitted
-        return self._programs[key](params, cache, next_pos)
+        return self._programs[key]
 
-    def admit(self, state: ServeState, one: ServeState, slot) -> ServeState:
-        """Recycle a batch slot: overwrite row ``slot`` of every per-
-        sequence array (and the cache row, see ``merge_cache_row``) with
-        the freshly-prefilled single-sequence state ``one``.  One fused
-        dispatch; ``slot`` is traced so admissions into different slots
-        share the compilation.  DONATES ``state`` (the resident batch)."""
+    def probe(self, params, cache, next_pos):
+        """Non-committing EAT probe over the live cache.  Never donated —
+        the whole point is that the cache survives the evaluation."""
+        return self.probe_program(cache, int(next_pos.shape[0]))(
+            params, cache, next_pos
+        )
+
+    def admit_program(self, state: ServeState, one: ServeState):
         key = ("admit", int(state.active.shape[0]))
         if key not in self._programs:
             def fn(state: ServeState, one: ServeState, slot) -> ServeState:
@@ -551,14 +633,20 @@ class Executor:
                     donate_argnums=0,
                 )
             self._programs[key] = jitted
-        return self._programs[key](state, one, jnp.asarray(slot, jnp.int32))
+        return self._programs[key]
+
+    def admit(self, state: ServeState, one: ServeState, slot) -> ServeState:
+        """Recycle a batch slot: overwrite row ``slot`` of every per-
+        sequence array (and the cache row, see ``merge_cache_row``) with
+        the freshly-prefilled single-sequence state ``one``.  One fused
+        dispatch; ``slot`` is traced so admissions into different slots
+        share the compilation.  DONATES ``state`` (the resident batch)."""
+        return self.admit_program(state, one)(
+            state, one, jnp.asarray(slot, jnp.int32)
+        )
 
     # ------------------------------------------------------ paged programs
-    def pack_paged(self, paged_cache: dict, dense_cache: dict, table) -> dict:
-        """Scatter a freshly prefilled dense cache into an empty paged
-        cache (serve()-start conversion).  DONATES ``paged_cache`` — the
-        pools are updated in place, same contract as every other
-        cache-consuming program."""
+    def pack_paged_program(self, paged_cache: dict, dense_cache: dict):
         B = int(paged_cache["pos"].shape[0])
         C_pre = int(dense_cache["pos"].shape[1])
         key = ("pack", B, C_pre)
@@ -578,17 +666,18 @@ class Executor:
                     donate_argnums=0,
                 )
             self._programs[key] = jitted
-        return self._programs[key](paged_cache, dense_cache,
-                                   jnp.asarray(table, jnp.int32))
+        return self._programs[key]
 
-    def admit_paged(self, state: ServeState, one: ServeState, slot,
-                    row_table) -> ServeState:
-        """Paged-cache slot recycling: like ``admit``, but the cache merge
-        routes the admitted prompt K/V through ``row_table`` (the
-        allocator's fresh page mapping for the slot — prompt blocks plus
-        one decode page).  ``slot`` and ``row_table`` are traced, so
-        admissions into different slots share the compilation.  DONATES
-        ``state``."""
+    def pack_paged(self, paged_cache: dict, dense_cache: dict, table) -> dict:
+        """Scatter a freshly prefilled dense cache into an empty paged
+        cache (serve()-start conversion).  DONATES ``paged_cache`` — the
+        pools are updated in place, same contract as every other
+        cache-consuming program."""
+        return self.pack_paged_program(paged_cache, dense_cache)(
+            paged_cache, dense_cache, jnp.asarray(table, jnp.int32)
+        )
+
+    def admit_paged_program(self, state: ServeState, one: ServeState):
         key = ("admit", int(state.active.shape[0]), "paged",
                int(one.cache["pos"].shape[1]))
         if key not in self._programs:
@@ -624,8 +713,20 @@ class Executor:
                     donate_argnums=0,
                 )
             self._programs[key] = jitted
-        return self._programs[key](state, one, jnp.asarray(slot, jnp.int32),
-                                   jnp.asarray(row_table, jnp.int32))
+        return self._programs[key]
+
+    def admit_paged(self, state: ServeState, one: ServeState, slot,
+                    row_table) -> ServeState:
+        """Paged-cache slot recycling: like ``admit``, but the cache merge
+        routes the admitted prompt K/V through ``row_table`` (the
+        allocator's fresh page mapping for the slot — prompt blocks plus
+        one decode page).  ``slot`` and ``row_table`` are traced, so
+        admissions into different slots share the compilation.  DONATES
+        ``state``."""
+        return self.admit_paged_program(state, one)(
+            state, one, jnp.asarray(slot, jnp.int32),
+            jnp.asarray(row_table, jnp.int32)
+        )
 
     def put_page_table(self, state: ServeState, table,
                        blocks: tuple | None = None) -> ServeState:
@@ -683,25 +784,7 @@ class Executor:
                   if "blocks" in state.cache else None)
         return self.put_page_table(state, alloc.snapshot(), blocks)
 
-    def retract(self, state: ServeState, new_n, pmon: MonitorState
-                ) -> ServeState:
-        """Proxy-mode chunk-boundary reconciliation: rewind every row to the
-        proxy's exit decision and sync the proxy monitor into the state.
-
-        In ``monitor="proxy"`` serving the generator decodes whole chunks
-        blind (no inline probe), so a row the proxy stopped at emitted-token
-        count ``new_n[b] < n_reasoning[b]`` has overshot: extra tokens in
-        ``out_tokens``, extra KV committed past the exit position.  This
-        program truncates the token buffer back to ``new_n``, rewinds
-        ``next_pos``/``n_reasoning``/``out_len``, position-masks the
-        overshoot KV (``pos >= new next_pos`` -> -1, slot-agnostic so it
-        works for ring AND paged caches — masked slots contribute exact
-        zeros to every later attention sum, the paged==ring invariant), and
-        re-derives ``ended_think`` over the kept tokens.  ``pmon`` (the
-        proxy's MonitorState) replaces the generator's inert monitor so
-        harvest/traces read the proxy's stop flags and EMA state.  A row
-        with no overshoot passes through unchanged.  DONATES ``state``.
-        """
+    def retract_program(self, state: ServeState):
         key = ("retract", int(state.active.shape[0]),
                self._kind(state.cache))
         if key not in self._programs:
@@ -754,16 +837,32 @@ class Executor:
                     donate_argnums=0,
                 )
             self._programs[key] = jitted
-        return self._programs[key](state, jnp.asarray(new_n, jnp.int32), pmon)
+        return self._programs[key]
 
-    def rollout(self, params, cache, next_pos, last_token, rng, *, n: int,
-                greedy: bool = False):
-        """Forced answer rollout: append </think> then generate n tokens.
-        Returns (tokens (B,n), logprobs (B,n)).  The cache is NOT donated:
-        rollouts are functional reads of a live cache the caller keeps
-        decoding from (``reason_with_trace``) or re-rolls K times
-        (``rollout_answers``) — donation here would corrupt the sequence."""
-        B = int(next_pos.shape[0])
+    def retract(self, state: ServeState, new_n, pmon: MonitorState
+                ) -> ServeState:
+        """Proxy-mode chunk-boundary reconciliation: rewind every row to the
+        proxy's exit decision and sync the proxy monitor into the state.
+
+        In ``monitor="proxy"`` serving the generator decodes whole chunks
+        blind (no inline probe), so a row the proxy stopped at emitted-token
+        count ``new_n[b] < n_reasoning[b]`` has overshot: extra tokens in
+        ``out_tokens``, extra KV committed past the exit position.  This
+        program truncates the token buffer back to ``new_n``, rewinds
+        ``next_pos``/``n_reasoning``/``out_len``, position-masks the
+        overshoot KV (``pos >= new next_pos`` -> -1, slot-agnostic so it
+        works for ring AND paged caches — masked slots contribute exact
+        zeros to every later attention sum, the paged==ring invariant), and
+        re-derives ``ended_think`` over the kept tokens.  ``pmon`` (the
+        proxy's MonitorState) replaces the generator's inert monitor so
+        harvest/traces read the proxy's stop flags and EMA state.  A row
+        with no overshoot passes through unchanged.  DONATES ``state``.
+        """
+        return self.retract_program(state)(
+            state, jnp.asarray(new_n, jnp.int32), pmon
+        )
+
+    def rollout_program(self, cache, B: int, n: int, greedy: bool):
         key = ("rollout", B, n, greedy, self._kind(cache))
         if key not in self._programs:
             model, cfg, ecfg = self.model, self.cfg, self.ecfg
@@ -808,7 +907,18 @@ class Executor:
                     self._ns(P()),
                 ))
             self._programs[key] = jitted
-        return self._programs[key](params, cache, next_pos, last_token, rng)
+        return self._programs[key]
+
+    def rollout(self, params, cache, next_pos, last_token, rng, *, n: int,
+                greedy: bool = False):
+        """Forced answer rollout: append </think> then generate n tokens.
+        Returns (tokens (B,n), logprobs (B,n)).  The cache is NOT donated:
+        rollouts are functional reads of a live cache the caller keeps
+        decoding from (``reason_with_trace``) or re-rolls K times
+        (``rollout_answers``) — donation here would corrupt the sequence."""
+        return self.rollout_program(cache, int(next_pos.shape[0]), n, greedy)(
+            params, cache, next_pos, last_token, rng
+        )
 
 
 # --------------------------------------------------------------------------
@@ -854,8 +964,15 @@ class ProxyExecutor(Executor):
         emitted count (the ``retract`` program's ``new_n``).  DONATES
         ``pstate``.
         """
+        return self.observe_chunk_program(pstate, int(gen_tokens.shape[1]))(
+            params, pstate, jnp.asarray(gen_tokens, jnp.int32),
+            jnp.asarray(n_start, jnp.int32),
+            jnp.asarray(n_emitted, jnp.int32),
+            jnp.asarray(chunk_len, jnp.int32),
+        )
+
+    def observe_chunk_program(self, pstate: ServeState, T: int):
         B = int(pstate.active.shape[0])
-        T = int(gen_tokens.shape[1])
         key = ("shadow", B, T, self._kind(pstate.cache))
         if key not in self._programs:
             shadow = self._shadow
@@ -911,9 +1028,4 @@ class ProxyExecutor(Executor):
                     donate_argnums=1,
                 )
             self._programs[key] = jitted
-        return self._programs[key](
-            params, pstate, jnp.asarray(gen_tokens, jnp.int32),
-            jnp.asarray(n_start, jnp.int32),
-            jnp.asarray(n_emitted, jnp.int32),
-            jnp.asarray(chunk_len, jnp.int32),
-        )
+        return self._programs[key]

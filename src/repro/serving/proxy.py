@@ -36,7 +36,6 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.eat import ProbeSpec, eval_eat
 from repro.core.monitor import MonitorState, ReasoningMonitor
 from repro.models.model import Model
 from repro.serving.cache import (
@@ -45,7 +44,12 @@ from repro.serving.cache import (
     alloc_paged_template,
     page_align,
 )
-from repro.serving.executor import ProxyExecutor, ServeState, positions_for
+from repro.serving.executor import (
+    ProxyExecutor,
+    ServeState,
+    build_stream_monitor_programs,
+    positions_for,
+)
 from repro.serving.scheduler import PageAllocator
 
 
@@ -59,26 +63,10 @@ class ProxyMonitor:
     capacity: int = 2048
 
     def __post_init__(self):
-        model = self.model
-
-        def _positions(pos1d):
-            if model.cfg.mrope_sections:
-                return jnp.broadcast_to(pos1d[..., None], pos1d.shape + (3,))
-            return pos1d
-
-        @jax.jit
-        def consume(params, cache, tokens, next_pos):
-            B, m = tokens.shape
-            pos1d = next_pos[:, None] + jnp.arange(m, dtype=jnp.int32)[None]
-            _, cache = model.prefill(params, tokens, _positions(pos1d), pos1d, cache)
-            return cache, next_pos + m
-
-        @jax.jit
-        def probe(params, cache, next_pos):
-            return eval_eat(model, params, cache, self.monitor.probe, next_pos)
-
-        self._consume = consume
-        self._probe = probe
+        # every jitted program comes from the executor layer — proxy.py is
+        # host orchestration only (the layering contract, tools/audit)
+        self._consume, self._probe, self._prefill = \
+            build_stream_monitor_programs(self.model, self.monitor.probe)
 
     def start(self, prompts: jax.Array, prompt_len: jax.Array):
         """Feed the question prompt (left-padded).  Returns opaque state."""
@@ -89,7 +77,7 @@ class ProxyMonitor:
         cache = alloc_cache(self.model.cfg, B, self.capacity)
         pos3 = (jnp.broadcast_to(pos1d[..., None], pos1d.shape + (3,))
                 if self.model.cfg.mrope_sections else pos1d)
-        _, cache = jax.jit(self.model.prefill)(self.params, prompts, pos3, pos1d, cache)
+        _, cache = self._prefill(self.params, prompts, pos3, pos1d, cache)
         return {
             "cache": cache,
             "next_pos": prompt_len.astype(jnp.int32),

@@ -1,0 +1,44 @@
+"""pallas-pass fixture: one impure index map (closes over a non-static
+array) and one soft masking fill (seeded violations), next to a clean
+kernel that must not be flagged."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _body(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def bad_gather(x, idx):
+    B, S = x.shape
+    return pl.pallas_call(
+        _body,
+        grid=(B,),
+        # SEEDED VIOLATION: the index map closes over the traced array idx
+        in_specs=[pl.BlockSpec((1, S), lambda b: (idx[b], 0))],
+        out_specs=pl.BlockSpec((1, S), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def soft_mask(s, mask):
+    # SEEDED VIOLATION: -1e9 leaves probability mass after softmax
+    return jnp.where(mask, s, -1e9)
+
+
+def clean_copy(x, block: int = 8):
+    B, S = x.shape
+    n = pl.cdiv(S, block)
+    return pl.pallas_call(
+        _body,
+        grid=(B, n),
+        in_specs=[pl.BlockSpec((1, block), lambda b, j: (b, j))],
+        out_specs=pl.BlockSpec((1, block), lambda b, j: (b, j)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def clean_mask(s, mask):
+    _NEG_INF = -1e30
+    return jnp.where(mask, s, _NEG_INF), jnp.where(mask, s, 0.0)

@@ -1,0 +1,47 @@
+"""keys-pass fixture: an executor-like program store with one builder that
+bakes a knob into the closure without keying it (seeded violation), one
+that keys everything correctly, and one waived through KEY_EXEMPT."""
+import jax
+
+KEY_EXEMPT = {
+    "waived": "fixture waiver: the knob cannot change within one store",
+}
+
+
+class MiniExec:
+    def __init__(self, model):
+        self.model = model
+        self._programs = {}
+
+    def _kind(self, cache):
+        return "paged" if "page_table" in cache else "ring"
+
+    def bad_chunk_program(self, state, use_monitor):
+        # SEEDED VIOLATION: use_monitor is traced into fn but not keyed —
+        # the second call with the other flag gets the first program
+        key = ("chunk", int(state.active.shape[0]), self._kind(state.cache))
+        if key not in self._programs:
+            def fn(params, st):
+                return st if use_monitor else (st, st)
+
+            self._programs[key] = jax.jit(fn)
+        return self._programs[key]
+
+    def good_chunk_program(self, state, use_monitor):
+        key = ("good", int(state.active.shape[0]), use_monitor,
+               self._kind(state.cache))
+        if key not in self._programs:
+            def fn(params, st):
+                return st if use_monitor else (st, st)
+
+            self._programs[key] = jax.jit(fn)
+        return self._programs[key]
+
+    def waived_program(self, state, use_monitor):
+        key = ("waived", int(state.active.shape[0]))
+        if key not in self._programs:
+            def fn(params, st):
+                return st if use_monitor else (st, st)
+
+            self._programs[key] = jax.jit(fn)
+        return self._programs[key]

@@ -1,0 +1,3 @@
+# layering fixture: a kernel reaching up into the serving stack (seeded
+# violation — kernels are leaves)
+from repro.serving.executor import program  # noqa: F401

@@ -1,0 +1,1 @@
+# layering fixture: the deleted shim, reintroduced (seeded violation)

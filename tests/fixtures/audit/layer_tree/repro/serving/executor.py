@@ -1,0 +1,4 @@
+# layering fixture: the jit owner — its jit sites must NOT be flagged
+import jax
+
+program = jax.jit(lambda x: x * 2)

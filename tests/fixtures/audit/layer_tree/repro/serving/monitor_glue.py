@@ -1,0 +1,6 @@
+# layering fixture: a serving module building jit programs outside the
+# executor (seeded violation), once directly and once through aliasing
+import jax
+
+fast = jax.jit(lambda x: x + 1)
+make = jax.jit

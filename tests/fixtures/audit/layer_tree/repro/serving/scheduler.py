@@ -1,0 +1,8 @@
+# layering fixture: a pure-host module importing jax (seeded violation)
+import jax
+import numpy as np
+
+
+def pick_slot(active):
+    del jax
+    return int(np.argmin(active))

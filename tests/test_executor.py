@@ -57,8 +57,8 @@ def test_chunk_decode_donates_cache(eng_and_state):
     budget = jnp.asarray(24, jnp.int32)
     chunk = jnp.asarray(8, jnp.int32)
     args = (eng.params, st, budget, chunk)
-    donated = eng.executor._chunk_program(st, True).lower(*args).compile()
-    plain = eng.executor._chunk_program(st, True, donate=False) \
+    donated = eng.executor.chunk_program(st, True).lower(*args).compile()
+    plain = eng.executor.chunk_program(st, True, donate=False) \
         .lower(*args).compile()
     cb = cache_bytes(st.cache)
 

@@ -243,7 +243,7 @@ def test_paged_chunk_donates_pools(serve_batch):
     st = st._replace(cache=packed)
     args = (eng.params, st, jnp.asarray(24, jnp.int32),
             jnp.asarray(8, jnp.int32))
-    prog = eng.executor._chunk_program(st, True)
+    prog = eng.executor.chunk_program(st, True)
     compiled = prog.lower(*args).compile()
     assert compiled.memory_analysis().alias_size_in_bytes >= \
         cache_bytes(st.cache)

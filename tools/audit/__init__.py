@@ -1,0 +1,1 @@
+"""repro-audit runner package — see ``python -m tools.audit.run --help``."""

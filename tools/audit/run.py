@@ -1,0 +1,79 @@
+#!/usr/bin/env python
+"""repro-audit: the static contract analyzer's one entry point.
+
+    python -m tools.audit.run                      # all five passes
+    python -m tools.audit.run --passes layering,keys,pallas,docs
+    python -m tools.audit.run --quick              # small lowered matrix
+    python -m tools.audit.run --json report.json --fail-on-violation
+
+Passes (docs/analysis.md; implementations in src/repro/analysis/):
+layering, keys, pallas, docs are pure-AST/filesystem and run in well under
+a second; ``lowered`` traces and lowers every serving program over the
+{ring,paged} x {gather,xla,pallas} x {self,proxy} x delta-regime matrix
+(~40 s on CPU; ``--quick`` restricts it to two cells for smoke runs).
+
+Exit status: 0 when every selected pass is clean, 1 with
+``--fail-on-violation`` otherwise (CI runs it with the flag; a human run
+always exits 0 so the report can be read without shell gymnastics).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[2]
+
+# self-bootstrapping: CI's docs/audit jobs invoke tools scripts without
+# PYTHONPATH=src, and the lowered pass must not grab a real accelerator
+sys.path.insert(0, str(REPO / "src"))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+def main(argv=None) -> int:
+    from repro.analysis import PASS_NAMES, run_passes
+
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.audit.run",
+        description="static contract analyzer for the serving stack")
+    ap.add_argument("--passes", default=",".join(PASS_NAMES),
+                    help=f"comma-separated subset of: {', '.join(PASS_NAMES)}")
+    ap.add_argument("--quick", action="store_true",
+                    help="lowered pass: 2 cells instead of the full matrix")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the machine-readable report here")
+    ap.add_argument("--fail-on-violation", action="store_true",
+                    help="exit 1 if any pass reports a violation (CI mode)")
+    args = ap.parse_args(argv)
+
+    names = [n.strip() for n in args.passes.split(",") if n.strip()]
+    unknown = [n for n in names if n not in PASS_NAMES]
+    if unknown:
+        ap.error(f"unknown pass(es): {', '.join(unknown)}")
+
+    results = run_passes(names, REPO, quick=args.quick)
+
+    n_viol = 0
+    for r in results:
+        mark = "ok  " if r.ok else "FAIL"
+        stat = " ".join(f"{k}={v}" for k, v in r.stats.items()
+                        if not isinstance(v, (list, dict)))
+        print(f"[{mark}] {r.name:<10} {stat}")
+        for v in r.violations:
+            print(f"       {v}")
+        n_viol += len(r.violations)
+
+    print(f"\naudit: {len(results)} passes, {n_viol} violations")
+    if args.json:
+        report = {"passes": [r.to_json() for r in results],
+                  "violations": n_viol}
+        Path(args.json).write_text(json.dumps(report, indent=2) + "\n",
+                                   encoding="utf-8")
+        print(f"wrote {args.json}")
+    return 1 if (n_viol and args.fail_on_violation) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,63 +1,30 @@
 #!/usr/bin/env python
 """Fail on broken relative links in README.md and docs/*.md.
 
-Checks every markdown inline link ``[text](target)``:
-  * http(s)/mailto targets are skipped (no network in CI);
-  * pure-anchor targets (``#section``) are skipped;
-  * everything else must resolve to an existing file or directory
-    relative to the file containing the link (any ``#anchor`` suffix is
-    stripped first).
-
-Run:  python tools/check_docs_links.py   (exit 1 + listing on failure)
+Thin shim: the check itself moved into the static analyzer as its ``docs``
+pass (``src/repro/analysis/docs_links.py``; run all passes with
+``python -m tools.audit.run``).  This entry point keeps the historical CLI
+and exit-code contract for existing CI invocations.
 """
 from __future__ import annotations
 
-import re
 import sys
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
-LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
-SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
-
-
-def doc_files() -> list[Path]:
-    files = [REPO / "README.md"]
-    files += sorted((REPO / "docs").glob("*.md"))
-    return [f for f in files if f.exists()]
-
-
-def check(path: Path) -> list[str]:
-    errors = []
-    text = path.read_text(encoding="utf-8")
-    for lineno, line in enumerate(text.splitlines(), 1):
-        for m in LINK_RE.finditer(line):
-            target = m.group(1)
-            if target.startswith(SKIP_PREFIXES):
-                continue
-            rel = target.split("#", 1)[0]
-            if not rel:
-                continue
-            resolved = (path.parent / rel).resolve()
-            if not resolved.exists():
-                errors.append(f"{path.relative_to(REPO)}:{lineno}: "
-                              f"broken link -> {target}")
-    return errors
+sys.path.insert(0, str(REPO / "src"))
 
 
 def main() -> int:
-    files = doc_files()
-    if not files:
-        print("no docs found to check", file=sys.stderr)
-        return 1
-    errors = [e for f in files for e in check(f)]
-    for e in errors:
-        print(e, file=sys.stderr)
-    n_links = sum(len(LINK_RE.findall(f.read_text(encoding="utf-8")))
-                  for f in files)
-    print(f"checked {len(files)} files / {n_links} links: "
-          f"{len(errors)} broken")
-    return 1 if errors else 0
+    from repro.analysis.docs_links import run
+
+    result = run(REPO)
+    for v in result.violations:
+        print(f"{v.where}: broken link -> {v.detail.split(': ', 1)[-1]}",
+              file=sys.stderr)
+    print(f"checked {result.stats['files']} files / "
+          f"{result.stats['links']} links: {len(result.violations)} broken")
+    return 1 if result.violations else 0
 
 
 if __name__ == "__main__":
