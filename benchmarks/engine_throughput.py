@@ -11,9 +11,14 @@ exactly what the probe-kernel work cannot recover from a host-bound loop.
 ``--scaling`` runs the continuous-batching ``serve()`` loop on (N x 1)
 data-parallel meshes of 1/2/4/8 simulated host devices (one subprocess per
 device count — the device count is fixed at process start) and emits
-``BENCH_serve_scaling.json`` so the perf trajectory accumulates per PR.  On
-one physical CPU the simulated sweep measures sharding/dispatch overhead,
-not real speedup; on real chips the same harness measures both.
+``BENCH_serve_scaling.json`` — throughput plus per-request latency
+p50/p95/p99 — so the perf trajectory accumulates per PR.  ``--overlap on``
+serves through the double-buffered pipeline (``serve(overlap=True)``): one
+blocking snapshot read per chunk boundary instead of one sync per
+host-facing scalar, which is exactly the host overhead the sync sweep's
+scaling cliff is made of.  On one physical CPU the simulated sweep
+measures sharding/dispatch overhead, not real speedup; on real chips the
+same harness measures both.
 
 ``--cache {ring,paged,both}`` runs the mixed-exit-length serving workload
 (temperature sampling — sequences exit via a naturally sampled </think> at
@@ -47,7 +52,7 @@ monitoring discount.  Emits ``artifacts/BENCH_proxy_serve.json``.
 
 Run:  PYTHONPATH=src python benchmarks/engine_throughput.py
       [--batch 8] [--budget 96] [--chunks 1 8 32] [--out artifacts/...json]
-      [--scaling] [--devices-list 1 2 4 8]
+      [--scaling] [--devices-list 1 2 4 8] [--overlap on]
       [--cache both] [--requests 32] [--page-size 16]
       [--monitor proxy] [--proxy-arch tiny-proxy]
 """
@@ -123,11 +128,14 @@ def measure(run, engine, batch, budget: int, reps: int) -> tuple[float, int]:
 
 
 def run_serve_child(devices: int, batch_per_dev: int, budget: int,
-                    reps: int) -> dict:
+                    reps: int, overlap: bool = False) -> dict:
     """One point of the DP scaling sweep, inside a process whose device
     count was fixed by XLA_FLAGS: weak scaling — global batch =
     ``batch_per_dev * devices`` slots on an (N x 1) data-parallel mesh,
-    2x-oversubscribed request queue through ``serve()``."""
+    2x-oversubscribed request queue through ``serve()``.  ``overlap``
+    runs the double-buffered pipeline (one host read per boundary instead
+    of one per host-facing scalar); per-request latency percentiles come
+    from the ``latency_s`` each result now carries."""
     from repro.launch.mesh import make_device_ctx
     from repro.serving.scheduler import SlotScheduler
 
@@ -138,22 +146,29 @@ def run_serve_child(devices: int, batch_per_dev: int, budget: int,
     capacity = SlotScheduler.required_capacity(
         batch["prompts"].shape[1], n_req, B, budget
     )
+    if overlap:
+        # the overlapped loop's ring guard adds one in-flight chunk to its
+        # host-mirror pointer estimate — give it that headroom
+        capacity += EngineConfig.chunk_len
     engine = build_engine(budget, ctx=make_device_ctx(devices, 1),
                           capacity=capacity)
 
-    times, tokens = [], 0
+    times, tokens, lat = [], 0, []
     for rep in range(reps + 1):        # rep 0 = compile warmup
         t0 = time.perf_counter()
         results = engine.serve(batch["prompts"], batch["prompt_len"],
                                jax.random.PRNGKey(100 + rep), batch_size=B,
-                               max_tokens=budget)
+                               max_tokens=budget, overlap=overlap)
         if rep:
             times.append(time.perf_counter() - t0)
             tokens = int(sum(r["n_reasoning"] for r in results))
+            lat += [r["latency_s"] for r in results]
     sec = float(np.median(times))
+    p50, p95, p99 = (float(np.percentile(lat, q)) for q in (50, 95, 99))
     return {"devices": devices, "batch": B, "requests": n_req,
-            "budget": budget, "seconds": sec, "tokens": tokens,
-            "tokens_per_s": tokens / sec}
+            "budget": budget, "overlap": overlap, "seconds": sec,
+            "tokens": tokens, "tokens_per_s": tokens / sec,
+            "latency_s": {"p50": p50, "p95": p95, "p99": p99}}
 
 
 def run_cache_bench(args) -> dict:
@@ -488,11 +503,13 @@ def run_proxy_bench(args) -> dict:
 
 
 def run_scaling_sweep(args) -> dict:
-    """Fan the sweep out one subprocess per device count (the simulated
-    device count is fixed at jax import) and collect
-    ``BENCH_serve_scaling.json``."""
-    points = []
-    for n in args.devices_list:
+    """Fan the sweep out one subprocess per (device count, loop mode) and
+    collect ``BENCH_serve_scaling.json``.  The simulated device count is
+    fixed at jax import, hence the subprocesses.  With ``--overlap on``
+    every device count runs BOTH loops — the synchronous boundary loop and
+    the double-buffered pipeline — so the artifact carries the A/B
+    side by side instead of a lone overlap curve with no reference."""
+    def child(n, overlap_mode):
         env = dict(os.environ)
         env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
         env.setdefault("JAX_PLATFORMS", "cpu")
@@ -502,7 +519,8 @@ def run_scaling_sweep(args) -> dict:
         )
         cmd = [sys.executable, os.path.abspath(__file__), "--serve-child",
                str(n), "--batch", str(args.batch),
-               "--budget", str(args.budget), "--reps", str(args.reps)]
+               "--budget", str(args.budget), "--reps", str(args.reps),
+               "--overlap", overlap_mode]
         r = subprocess.run(cmd, capture_output=True, text=True, env=env,
                            timeout=1200)
         if r.returncode != 0:
@@ -510,21 +528,45 @@ def run_scaling_sweep(args) -> dict:
                                f"{r.stdout}\n{r.stderr}")
         line = [ln for ln in r.stdout.splitlines()
                 if ln.startswith("SCALING_RESULT ")][-1]
-        rec = json.loads(line[len("SCALING_RESULT "):])
-        points.append(rec)
-        print(f"devices={rec['devices']:2d}  batch={rec['batch']:3d}  "
-              f"{rec['tokens_per_s']:8.0f} tok/s", flush=True)
-    # baseline = the true 1-device point when the sweep includes it; else
-    # the smallest device count (and the key says so)
-    base_pt = next((p for p in points if p["devices"] == 1),
-                   min(points, key=lambda p: p["devices"]))
-    key = ("speedup_vs_1dev" if base_pt["devices"] == 1
-           else f"speedup_vs_{base_pt['devices']}dev")
-    for p in points:
-        p[key] = p["tokens_per_s"] / base_pt["tokens_per_s"]
-        print(f"devices={p['devices']:2d}  {key}={p[key]:5.2f}x", flush=True)
+        return json.loads(line[len("SCALING_RESULT "):])
+
+    modes = ["off", "on"] if args.overlap == "on" else ["off"]
+    points = []
+    for n in args.devices_list:
+        for mode in modes:
+            rec = child(n, mode)
+            points.append(rec)
+            tag = "overlap" if rec["overlap"] else "sync   "
+            print(f"devices={rec['devices']:2d}  batch={rec['batch']:3d}  "
+                  f"{tag}  {rec['tokens_per_s']:8.0f} tok/s  "
+                  f"p50={rec['latency_s']['p50']:6.2f}s "
+                  f"p99={rec['latency_s']['p99']:6.2f}s", flush=True)
+    # per-mode speedup curve: baseline = that mode's true 1-device point
+    # when the sweep includes it; else its smallest device count (and the
+    # key says so)
+    for ov in sorted({p["overlap"] for p in points}):
+        grp = [p for p in points if p["overlap"] == ov]
+        base_pt = next((p for p in grp if p["devices"] == 1),
+                       min(grp, key=lambda p: p["devices"]))
+        key = ("speedup_vs_1dev" if base_pt["devices"] == 1
+               else f"speedup_vs_{base_pt['devices']}dev")
+        for p in grp:
+            p[key] = p["tokens_per_s"] / base_pt["tokens_per_s"]
+            tag = "overlap" if ov else "sync   "
+            print(f"devices={p['devices']:2d}  {tag}  {key}={p[key]:5.2f}x",
+                  flush=True)
+    if len(modes) == 2:
+        # overlap-vs-sync ratio at each device count — the honest A/B
+        for n in args.devices_list:
+            s = next(p for p in points
+                     if p["devices"] == n and not p["overlap"])
+            o = next(p for p in points if p["devices"] == n and p["overlap"])
+            o["overlap_vs_sync"] = o["tokens_per_s"] / s["tokens_per_s"]
+            print(f"devices={n:2d}  overlap_vs_sync="
+                  f"{o['overlap_vs_sync']:5.2f}x", flush=True)
     out = {"sweep": "serve_dp_weak_scaling", "batch_per_device": args.batch,
-           "budget": args.budget, "points": points}
+           "budget": args.budget, "overlap": args.overlap == "on",
+           "points": points}
     path = args.out or os.path.join(
         os.path.dirname(__file__), "..", "artifacts",
         "BENCH_serve_scaling.json")
@@ -544,6 +586,10 @@ def main():
                     help="run the data-parallel serve() scaling sweep over "
                          "--devices-list simulated host devices")
     ap.add_argument("--devices-list", type=int, nargs="+", default=[1, 2, 4, 8])
+    ap.add_argument("--overlap", choices=["off", "on"], default="off",
+                    help="--scaling: serve through the double-buffered "
+                         "pipeline (serve(overlap=True)) instead of the "
+                         "synchronous chunk-boundary loop")
     ap.add_argument("--cache", choices=["ring", "paged", "both"], default=None,
                     help="run the ring-vs-paged KV cache serve() A/B on the "
                          "mixed-exit workload ('both' writes "
@@ -587,10 +633,12 @@ def main():
         # silently while another flag is set hides the un-run benchmark
         ap.error(f"{' and '.join(modes)} are standalone A/Bs; run them "
                  f"separately")
+    if args.overlap == "on" and not (args.scaling or args.serve_child):
+        ap.error("--overlap applies to the --scaling serve sweep")
 
     if args.serve_child:
         rec = run_serve_child(args.serve_child, args.batch, args.budget,
-                              args.reps)
+                              args.reps, overlap=args.overlap == "on")
         print("SCALING_RESULT " + json.dumps(rec))
         return rec
     if args.scaling:

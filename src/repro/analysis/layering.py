@@ -11,6 +11,11 @@ Pure-AST checks over the import graph and jit-construction sites:
     ProxyMonitor jit sites were caught and moved in this PR);
   * ``kernel_pkg`` modules never import from ``app_pkg`` (kernels are
     leaves; a kernel reaching up into serving/ would invert the stack);
+  * ``dispatch_only`` modules (serving/pipeline — the overlapped serve
+    loop) never reference a blocking primitive (``jax.block_until_ready``,
+    ``device_get``): the pipeline's whole point is that the only blocking
+    read is ``np.asarray`` on a chunk snapshot, one boundary behind the
+    dispatch frontier — a stray sync there silently re-serializes serving;
   * ``banned_paths`` stay deleted (the ``launch/serve_step.py`` shim).
 
 Rules are data so tests can run the pass over fixture trees.
@@ -29,6 +34,8 @@ DEFAULT_RULES = {
     "jit_scope": "repro.serving",
     "kernel_pkg": "repro.kernels",
     "app_pkg": "repro.serving",
+    "dispatch_only": ("repro.serving.pipeline",),
+    "dispatch_only_forbidden": ("block_until_ready", "device_get"),
     "banned_paths": ("repro/launch/serve_step.py",),
 }
 
@@ -77,6 +84,23 @@ def jit_sites(tree: ast.Module) -> list[int]:
     return lines
 
 
+def blocking_sites(tree: ast.Module, forbidden: tuple) -> list[tuple[str, int]]:
+    """Lines referencing a blocking primitive — attribute loads
+    (``jax.block_until_ready``, ``dev.device_get``) and bare names
+    (``from jax import block_until_ready``) both count, so aliasing
+    cannot hide a sync."""
+    sites = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) and node.attr in forbidden:
+            sites.append((node.attr, node.lineno))
+        elif isinstance(node, ast.Name) and node.id in forbidden:
+            sites.append((node.id, node.lineno))
+        elif isinstance(node, ast.ImportFrom):
+            sites += [(a.name, node.lineno) for a in node.names
+                      if a.name in forbidden]
+    return sites
+
+
 def _imports_root(name: str, roots: tuple) -> bool:
     return any(name == r or name.startswith(r + ".") for r in roots)
 
@@ -112,6 +136,15 @@ def run(src_root, rules: dict | None = None) -> PassResult:
                     f"jit program construction outside {rules['jit_owner']} "
                     f"— all serving programs are built by the executor"))
 
+        if mod in rules["dispatch_only"]:
+            for name, line in blocking_sites(
+                    tree, tuple(rules["dispatch_only_forbidden"])):
+                violations.append(Violation(
+                    "layering", f"{mod}:{line}", "dispatch-only",
+                    f"dispatch-only module references blocking primitive "
+                    f"'{name}' — the overlapped serve loop may only block "
+                    f"through np.asarray on a chunk snapshot"))
+
         kpkg = rules["kernel_pkg"]
         if mod == kpkg or mod.startswith(kpkg + "."):
             for name, line in imps:
@@ -129,7 +162,8 @@ def run(src_root, rules: dict | None = None) -> PassResult:
 
     return PassResult("layering", violations, {
         "modules": n_modules,
-        "rules": 4,
+        "rules": 5,
         "pure_host": list(rules["pure_host"]),
         "jit_owner": rules["jit_owner"],
+        "dispatch_only": list(rules["dispatch_only"]),
     })

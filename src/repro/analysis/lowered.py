@@ -66,10 +66,10 @@ REGIMES = (("exit", 1e-3), ("never", 1e9))
 #: and checked — once per family, on the gather impl (donation is a buffer
 #: aliasing property of the jit call, not of the attention algorithm).
 _DONATION_CELLS = {
-    ("self", "ring"): ("chunk", "decode", "prefill", "probe", "admit",
-                       "rollout", "serve_step"),
+    ("self", "ring"): ("chunk", "chunk_snapshot", "decode", "prefill",
+                       "probe", "admit", "rollout", "serve_step"),
     ("self", "paged"): ("pack", "admit"),
-    ("proxy", "ring"): ("shadow", "retract"),
+    ("proxy", "ring"): ("shadow", "retract", "retract_lagged"),
 }
 
 
@@ -309,6 +309,14 @@ def _audit_self_cell(a: _Audit, kind: str, impl: str):
         a.program(tag(("chunk", B, True, True)), "chunk", prog,
                   (params, state, s0, s0), donate=True,
                   compile_donation=dc("chunk") and regime == "exit")
+        # overlap-mode variant: the chunk plus its packed host snapshot —
+        # same delta sensitivity, and the snapshot outputs must NOT break
+        # the state donation (the pipeline reads them after the state has
+        # been donated into the next dispatch)
+        a.program(tag(("chunk", B, True, True, "snap")), "chunk_snapshot",
+                  ex.chunk_snapshot_program(state, True),
+                  (params, state, s0, s0), donate=True,
+                  compile_donation=dc("chunk_snapshot") and regime == "exit")
 
         if regime != "exit":
             continue           # the remaining programs don't read delta
@@ -410,6 +418,18 @@ def _audit_proxy_cell(a: _Audit, kind: str, impl: str):
                   lambda: gen_monitor.init(B))),
               donate=DONATION_CONTRACT["retract"] is not None,
               compile_donation="retract" in don_fams)
+    # overlap-mode programs on the generator chain: the snapshot chunk the
+    # pipeline dispatches ahead, and the one-boundary-late reconciliation
+    a.program(("proxy", kind, impl, "never",
+               str(("chunk", B, False, True, "snap"))),
+              "chunk_snapshot", gex.chunk_snapshot_program(gstate, False),
+              (gparams, gstate, s0, s0))
+    a.program(("proxy", kind, impl, "never", str(("retract", B, "lagged"))),
+              "retract_lagged", gex.retract_lagged_program(gstate),
+              (gstate, _i32((B,)), jax.eval_shape(
+                  lambda: gen_monitor.init(B))),
+              donate=DONATION_CONTRACT["retract"] is not None,
+              compile_donation="retract_lagged" in don_fams)
 
     # the black-box contract, checked on the artifacts: the generator
     # program store must hold no probe and no monitored chunk

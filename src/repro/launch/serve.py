@@ -72,6 +72,14 @@ def main():
     ap.add_argument("--num-pages", type=int, default=0,
                     help="paged backend: physical page-pool size "
                          "(0 = ring-equivalent auto sizing)")
+    ap.add_argument("--overlap", choices=["off", "on"], default="off",
+                    help="--requests serving loop: off = synchronous chunk "
+                         "boundaries (dispatch, block, harvest), on = the "
+                         "double-buffered pipeline (chunk N+1 dispatched "
+                         "while chunk N is harvested; bit-identical token "
+                         "streams under greedy sampling, proxy exits land "
+                         "at most one chunk later — docs/serving.md "
+                         "§Overlapped serving)")
     ap.add_argument("--monitor", choices=["self", "proxy"], default="self",
                     help="EAT monitor tier: self (white-box, probe inlined "
                          "in the decode chunk) or proxy (black-box, a "
@@ -92,6 +100,9 @@ def main():
     if args.monitor == "proxy" and not args.requests:
         ap.error("--monitor proxy serves through the scheduler: pass "
                  "--requests N")
+    if args.overlap == "on" and not args.requests:
+        ap.error("--overlap on applies to the --requests serving loop: "
+                 "pass --requests N")
     if args.monitor != "proxy" and (args.proxy_config or args.proxy_ckpt
                                     or args.proxy_mesh):
         ap.error("--proxy-config/--proxy-ckpt/--proxy-mesh only apply with "
@@ -171,6 +182,10 @@ def main():
         ecfg.capacity = SlotScheduler.required_capacity(
             batch["prompts"].shape[1], args.requests, args.batch, args.budget
         )
+        if args.overlap == "on":
+            # the overlapped loop's ring guard adds one in-flight chunk to
+            # its (host-mirror) pointer estimate — give it that headroom
+            ecfg.capacity += args.chunk
         ecfg.cache = CacheConfig(kind=args.cache, page_size=args.page_size,
                                  num_pages=args.num_pages,
                                  attn_impl=args.attn_impl)
@@ -180,7 +195,8 @@ def main():
     if args.requests:
         results = engine.serve(batch["prompts"], batch["prompt_len"],
                                jax.random.PRNGKey(0), batch_size=args.batch,
-                               answer_len=4)
+                               answer_len=4,
+                               overlap=args.overlap == "on")
         ans = np.array([ChainTask.extract_answer(r["answer_tokens"][None])[0]
                         for r in results])
         n = np.array([r["n_reasoning"] for r in results])

@@ -38,6 +38,8 @@ evaluation point, EAT / confidence / forced-rollout answers — the offline
 from __future__ import annotations
 
 import dataclasses
+import time
+from types import SimpleNamespace
 from typing import Callable, Optional
 
 import jax
@@ -284,10 +286,112 @@ class ReasoningEngine:
         into different slots share the compilation).  CONSUMES ``state``."""
         return self.executor.admit(state, one, slot)
 
+    def _serve_setup(self, prompts, prompt_len, rng, *, batch_size: int,
+                     max_tokens: int | None, use_monitor: bool,
+                     chunk_len: int | None,
+                     overlap: bool = False) -> SimpleNamespace:
+        """Shared front half of both serve loops (sync below, overlapped in
+        ``serving.pipeline``): parse the request list, build the scheduler /
+        page allocator / proxy tier, prefill + pack the initial cohort, and
+        run the setup-time capacity checks.  Returns the namespace the loop
+        bodies consume; ``cur0`` is the post-prefill ring pointer (already
+        synced by the capacity check — the overlapped loop seeds its host
+        mirror from it instead of re-syncing).  ``overlap`` widens the
+        auto-sized page pool by one row allotment: the pipeline parks a
+        harvested row's pages on the in-flight fence for one boundary, so
+        a slot's old and new occupant briefly double-book its footprint."""
+        prompts_np = np.asarray(prompts)
+        plen_np = np.asarray(prompt_len)
+        n_req = prompts_np.shape[0]
+        S = prompts_np.shape[1]
+        B = min(batch_size, n_req)
+        budget = int(max_tokens or self.ecfg.max_reasoning_tokens)
+        budget_dev = jnp.asarray(budget, jnp.int32)
+        chunk_py = max(1, chunk_len or self.ecfg.chunk_len)
+        chunk = jnp.asarray(chunk_py, jnp.int32)
+
+        t0 = time.perf_counter()
+        requests = [
+            Request(rid=i, prompt=prompts_np[i], prompt_len=int(plen_np[i]),
+                    submitted_at=t0)
+            for i in range(n_req)
+        ]
+        sched = SlotScheduler(requests, B, capacity=self.ecfg.capacity,
+                              budget=budget)
+
+        # ---- cache backend (docs/serving.md): the paged path keeps the
+        # ring's logical addressing but backs it with a page pool, so the
+        # host loop additionally (a) maps pages for every slot range a
+        # dispatch may write, (b) pushes the allocator's table before each
+        # dispatch, (c) frees a request's pages at harvest
+        ccfg = self.ecfg.cache
+        paged = ccfg.kind == "paged"
+        alloc = None
+        C_pre = None
+        probe_m = len(self.monitor.probe)
+        if paged:
+            ps = ccfg.page_size
+            C_log = page_align(self.ecfg.capacity, ps)
+            n_blocks = C_log // ps
+            num_pages = ccfg.num_pages or (
+                B * n_blocks + 1 + (n_blocks if overlap else 0))
+            alloc = PageAllocator(num_pages, ps, n_blocks, B)
+            C_pre = page_align(S, ps)      # prompt-sized prefill capacity
+
+        # ---- proxy tier (monitor="proxy"): the generator chunk runs with
+        # its inline monitor OFF — the black-box contract — and the proxy
+        # shadows each chunk, feeding exits back through retract
+        proxy_mode = use_monitor and self.proxy is not None
+        ptier = None
+        self._ptier = None       # kept for post-serve stats (tests/benches)
+        if proxy_mode:
+            ptier = self._ptier = ProxyTier(
+                self.proxy_executor, self.proxy_params, self.ecfg,
+                self.monitor, self.proxy.cache or ccfg,
+                self.proxy.capacity or self.ecfg.capacity, budget,
+            )
+        gen_monitor = use_monitor and not proxy_mode
+
+        cohort = sched.start_batch()
+        rng, sub = jax.random.split(rng)
+        state = self.start(jnp.asarray(prompts_np[:B]),
+                           jnp.asarray(plen_np[:B]), sub,
+                           capacity=C_pre if paged else None)
+        if paged:
+            for req in cohort:
+                alloc.ensure(req.slot, 0, S - 1)       # the prompt pages
+            template = alloc_paged_template(
+                self.model.cfg, B, C_log, ps, num_pages, alloc=alloc,
+                native=ccfg.attn_impl != "gather")
+            state = state._replace(cache=self.executor.pack_paged(
+                template, state.cache, alloc.table))
+        if ptier is not None:
+            ptier.start_batch(prompts_np[:B], plen_np[:B],
+                              [req.slot for req in cohort])
+        for req in cohort:
+            req.begin_decode()
+        cur0 = int(state.cache["cur"])
+        sched.check_capacity(cur0, "the initial batch")
+        if ptier is not None:
+            ptier.check_capacity("the initial batch")
+
+        # the generator only pays a probe tail when IT runs the probe; in
+        # proxy mode that tail belongs to the proxy tier's pool
+        gen_tail = 0 if proxy_mode else probe_m
+        return SimpleNamespace(
+            prompts_np=prompts_np, plen_np=plen_np, n_req=n_req, S=S, B=B,
+            budget=budget, budget_dev=budget_dev, chunk_py=chunk_py,
+            chunk=chunk, requests=requests, sched=sched, paged=paged,
+            alloc=alloc, C_pre=C_pre, proxy_mode=proxy_mode, ptier=ptier,
+            gen_monitor=gen_monitor, gen_tail=gen_tail, rng=rng, state=state,
+            cur0=cur0,
+        )
+
     def serve(self, prompts, prompt_len, rng, *, batch_size: int,
               max_tokens: int | None = None, use_monitor: bool = True,
               chunk_len: int | None = None, answer_len: int = 0,
-              record_trace: bool = False) -> list[dict]:
+              record_trace: bool = False, overlap: bool = False,
+              pipeline_hooks=None) -> list[dict]:
         """Continuous-batching serving loop over N requests with
         ``batch_size`` slots.
 
@@ -324,83 +428,47 @@ class ReasoningEngine:
         keys (``reasoning_tokens``, ``n_reasoning``, ``ended_think``, and —
         when ``answer_len`` > 0 — the greedy forced-answer
         ``answer_tokens``) plus the request metadata: ``exit_reason``
-        (``eat`` / ``end_think`` / ``budget``), terminal ``status``, and —
-        with ``record_trace`` — the chunk-boundary ``eat_trace``
-        (n_reasoning, n_evals, ema_var) snapshots.
+        (``eat`` / ``end_think`` / ``budget``), terminal ``status``,
+        per-request ``latency_s``, and — with ``record_trace`` — the
+        chunk-boundary ``eat_trace`` (n_reasoning, n_evals, ema_var)
+        snapshots.
+
+        With ``overlap=True`` the loop is the double-buffered pipeline of
+        ``serving.pipeline``: chunk N+1 is dispatched before chunk N's
+        boundary is harvested, admissions/page-table pushes move into the
+        overlap window, and in proxy mode the shadow of chunk N runs
+        concurrently with generator chunk N+1 (retract lands one boundary
+        late — exit latency +≤1 chunk, token streams unchanged).  Under
+        greedy sampling the results are bit-identical to ``overlap=False``
+        (tests/test_async_serve.py); with temperature sampling the rng
+        split schedule differs, so streams may diverge (still valid
+        samples).  ``pipeline_hooks`` (a ``serving.pipeline.PipelineHooks``)
+        is the test seam for forcing adversarial interleavings.
         """
-        prompts_np = np.asarray(prompts)
-        plen_np = np.asarray(prompt_len)
-        n_req = prompts_np.shape[0]
-        S = prompts_np.shape[1]
-        B = min(batch_size, n_req)
-        budget = int(max_tokens or self.ecfg.max_reasoning_tokens)
-        budget_dev = jnp.asarray(budget, jnp.int32)
-        chunk_py = max(1, chunk_len or self.ecfg.chunk_len)
-        chunk = jnp.asarray(chunk_py, jnp.int32)
-
-        requests = [
-            Request(rid=i, prompt=prompts_np[i], prompt_len=int(plen_np[i]))
-            for i in range(n_req)
-        ]
-        sched = SlotScheduler(requests, B, capacity=self.ecfg.capacity,
-                              budget=budget)
-
-        # ---- cache backend (docs/serving.md): the paged path keeps the
-        # ring's logical addressing but backs it with a page pool, so the
-        # host loop additionally (a) maps pages for every slot range a
-        # dispatch may write, (b) pushes the allocator's table before each
-        # dispatch, (c) frees a request's pages at harvest
-        ccfg = self.ecfg.cache
-        paged = ccfg.kind == "paged"
-        alloc = None
-        probe_m = len(self.monitor.probe)
-        if paged:
-            ps = ccfg.page_size
-            C_log = page_align(self.ecfg.capacity, ps)
-            n_blocks = C_log // ps
-            num_pages = ccfg.num_pages or (B * n_blocks + 1)
-            alloc = PageAllocator(num_pages, ps, n_blocks, B)
-            C_pre = page_align(S, ps)      # prompt-sized prefill capacity
-
-        # ---- proxy tier (monitor="proxy"): the generator chunk runs with
-        # its inline monitor OFF — the black-box contract — and the proxy
-        # shadows each chunk, feeding exits back through retract
-        proxy_mode = use_monitor and self.proxy is not None
-        ptier = None
-        self._ptier = None       # kept for post-serve stats (tests/benches)
-        if proxy_mode:
-            ptier = self._ptier = ProxyTier(
-                self.proxy_executor, self.proxy_params, self.ecfg,
-                self.monitor, self.proxy.cache or ccfg,
-                self.proxy.capacity or self.ecfg.capacity, budget,
-            )
-        gen_monitor = use_monitor and not proxy_mode
-
-        cohort = sched.start_batch()
-        rng, sub = jax.random.split(rng)
-        state = self.start(jnp.asarray(prompts_np[:B]),
-                           jnp.asarray(plen_np[:B]), sub,
-                           capacity=C_pre if paged else None)
-        if paged:
-            for req in cohort:
-                alloc.ensure(req.slot, 0, S - 1)       # the prompt pages
-            template = alloc_paged_template(
-                self.model.cfg, B, C_log, ps, num_pages, alloc=alloc,
-                native=ccfg.attn_impl != "gather")
-            state = state._replace(cache=self.executor.pack_paged(
-                template, state.cache, alloc.table))
-        if ptier is not None:
-            ptier.start_batch(prompts_np[:B], plen_np[:B],
-                              [req.slot for req in cohort])
-        for req in cohort:
-            req.begin_decode()
-        sched.check_capacity(int(state.cache["cur"]), "the initial batch")
-        if ptier is not None:
-            ptier.check_capacity("the initial batch")
-
-        # the generator only pays a probe tail when IT runs the probe; in
-        # proxy mode that tail belongs to the proxy tier's pool
-        gen_tail = 0 if proxy_mode else probe_m
+        ss = self._serve_setup(prompts, prompt_len, rng,
+                               batch_size=batch_size, max_tokens=max_tokens,
+                               use_monitor=use_monitor, chunk_len=chunk_len,
+                               overlap=overlap)
+        if overlap:
+            from repro.serving.pipeline import serve_overlapped
+            try:
+                return serve_overlapped(self, ss, answer_len=answer_len,
+                                        record_trace=record_trace,
+                                        hooks=pipeline_hooks)
+            finally:
+                if ss.ptier is not None:
+                    # drop the proxy tier's device buffers; host-side
+                    # allocator stats stay readable via ``_ptier``
+                    ss.ptier.state = None
+        # ---- synchronous loop (--overlap off): one host round trip per
+        # chunk boundary.  The overlapped loop must stay bit-exact with
+        # this body under greedy sampling — change them together.
+        sched, state, rng = ss.sched, ss.state, ss.rng
+        alloc, ptier, paged = ss.alloc, ss.ptier, ss.paged
+        proxy_mode, gen_monitor = ss.proxy_mode, ss.gen_monitor
+        S, budget_dev = ss.S, ss.budget_dev
+        budget, chunk_py, chunk = ss.budget, ss.chunk_py, ss.chunk
+        gen_tail, C_pre = ss.gen_tail, ss.C_pre
 
         def ensure_pages(span: int, *, clamp_to_budget: bool = False):
             """Occupied-slot pages for the next generator dispatch — the
@@ -550,7 +618,7 @@ class ReasoningEngine:
             # the tier's largest allocation); the host-side allocator
             # stats stay readable via ``_ptier`` for tests and benches
             ptier.state = None
-        return [r.to_result() for r in requests]
+        return [r.to_result() for r in ss.requests]
 
     # ------------------------------------------------------------- answers
     def force_answer(self, state: ServeState, n_tokens: int, rng=None,

@@ -19,6 +19,11 @@ exists in the tree) and builds every program the engine dispatches:
 
   prefill        prompt -> cache fill            (cache arg DONATED)
   decode_chunk   lax.while_loop of EAT steps     (ServeState DONATED)
+  decode_chunk_snapshot  the chunk + a packed host-facing snapshot of the
+                 harvest scalars in FRESH buffers (ServeState DONATED) —
+                 the overlap pipeline's variant: the state is donated into
+                 the next dispatch before the host reads anything, so the
+                 host must never hold a reference into the state itself
   decode_step    one unmonitored step            (per-token baseline, no
                                                   donation: benchmarks call
                                                   it repeatedly on one state)
@@ -31,6 +36,9 @@ exists in the tree) and builds every program the engine dispatches:
                                                   decoding from / re-rolling
                                                   the same live cache)
   retract        proxy-mode chunk reconciliation (ServeState DONATED)
+  retract_lagged overlap-mode reconciliation one chunk late: only proxy-
+                 stopped rows rewind; the rest pass through untouched
+                                                  (ServeState DONATED)
 
 The black-box (``monitor="proxy"``) tier adds a second program store:
 ``ProxyExecutor`` drives a *different* model that shadows the generator's
@@ -82,6 +90,7 @@ from repro.serving.sampler import SamplerConfig, logprob_of, sample
 from repro.sharding.partition import (
     param_pspecs,
     proxy_stream_pspecs,
+    serve_snapshot_pspecs,
     serve_state_pspecs,
 )
 
@@ -174,6 +183,15 @@ class ServeState(NamedTuple):
     ended_think: jax.Array     # (B,) emitted </think> naturally
     out_tokens: jax.Array      # (B, T_buf) generated reasoning tokens
     out_len: jax.Array         # (B,)
+
+
+#: Row order of the packed (len(SNAP_ROWS), B) int32 block of a chunk
+#: snapshot (``Executor.decode_chunk_snapshot``) — the overlap pipeline
+#: indexes the host copy by position in this tuple.  ``cur`` is the cache's
+#: shared ring pointer broadcast per row so the whole int snapshot is one
+#: fused buffer.
+SNAP_ROWS = ("active", "n_reasoning", "out_len", "ended_think", "stop_flag",
+             "n_evals", "cur")
 
 
 # --------------------------------------------------------------------------
@@ -502,6 +520,84 @@ class Executor:
             params, state, budget, chunk_len
         )
 
+    # ----------------------------------------------- overlap-mode programs
+    #
+    # The async pipeline (serving/pipeline.py) dispatches chunk N+1 before
+    # the host has read anything of chunk N, and the chunk donates its
+    # ServeState into that next dispatch — so a host reference into any
+    # state buffer would be invalidated mid-read.  Every host-facing value
+    # therefore comes back as a SEPARATE snapshot: ``_snapshot_of`` routes
+    # each field through stack/concatenate, whose output shapes differ from
+    # every state field, so XLA can never alias a snapshot buffer to an
+    # output that a later dispatch donates away.
+
+    def _snapshot_of(self, st: ServeState) -> dict:
+        B = st.active.shape[0]
+        cur = jnp.broadcast_to(
+            jnp.asarray(st.cache["cur"], jnp.int32).reshape(()), (B,))
+        ints = jnp.stack([
+            st.active.astype(jnp.int32),
+            st.n_reasoning.astype(jnp.int32),
+            st.out_len.astype(jnp.int32),
+            st.ended_think.astype(jnp.int32),
+            st.monitor.stop_flag.astype(jnp.int32),
+            st.monitor.n_evals.astype(jnp.int32),
+            cur,
+        ], 0)
+        var = self.monitor.stopper.debiased_var(st.monitor.stop_state)
+        toks = jnp.concatenate([st.out_tokens, st.out_len[:, None]], 1)
+        return {"ints": ints, "var": var.astype(jnp.float32), "tokens": toks}
+
+    def chunk_snapshot_program(self, state: ServeState, use_monitor: bool):
+        B = int(state.active.shape[0])
+        key = ("chunk", B, use_monitor, True, self._kind(state.cache), "snap")
+        if key not in self._programs:
+            step_fn = self._step_mon if use_monitor else self._step_plain
+
+            def chunk(params, st: ServeState, budget, chunk_len):
+                def cond(carry):
+                    i, s = carry
+                    return (i < chunk_len) & s.active.any()
+
+                def body(carry):
+                    i, s = carry
+                    return i + 1, self._advance(params, s, budget, step_fn)
+
+                _, st = jax.lax.while_loop(
+                    cond, body, (jnp.zeros((), jnp.int32), st)
+                )
+                return st, self._snapshot_of(st)
+
+            if self.ctx.mesh is None:
+                jitted = jax.jit(chunk, donate_argnums=(1,))
+            else:
+                ssh = self._state_sh(state)
+                jitted = jax.jit(
+                    chunk,
+                    in_shardings=(self._param_sh, ssh, self._ns(P()),
+                                  self._ns(P())),
+                    out_shardings=(ssh,
+                                   self._sh(serve_snapshot_pspecs(self.ctx,
+                                                                  B))),
+                    donate_argnums=(1,),
+                )
+            self._programs[key] = jitted
+        return self._programs[key]
+
+    def decode_chunk_snapshot(self, params, state: ServeState, budget,
+                              chunk_len, *, use_monitor: bool = True
+                              ) -> tuple[ServeState, dict]:
+        """``decode_chunk`` plus the packed harvest snapshot the overlap
+        pipeline reads one boundary late: ``(state, {ints, var, tokens})``
+        where ``ints`` is the (len(SNAP_ROWS), B) int32 block (row order
+        ``SNAP_ROWS``), ``var`` the debiased EMA variance the traces record,
+        and ``tokens`` the (B, T+1) out_tokens copy (last column = out_len).
+        DONATES ``state``; the snapshot buffers are fresh and stay valid
+        after the state is donated into the next dispatch."""
+        return self.chunk_snapshot_program(state, use_monitor)(
+            params, state, budget, chunk_len
+        )
+
     def decode_program(self, state: ServeState):
         key = ("decode", int(state.active.shape[0]), self._kind(state.cache))
         if key not in self._programs:
@@ -756,8 +852,9 @@ class Executor:
         return state._replace(cache=cache)
 
     def ensure_chunk_pages(self, alloc, state: ServeState, slots, span: int,
-                           *, tail: int = 0, budget: int | None = None
-                           ) -> ServeState:
+                           *, tail: int = 0, budget: int | None = None,
+                           cur: int | None = None, n_reasoning=None,
+                           slack: int = 0) -> ServeState:
         """Map (and push) pages covering the next ``span`` logical slots
         for every slot in ``slots`` before a writing dispatch — THE page-
         sizing rule for a chunk, shared by the generator loop and the
@@ -767,15 +864,27 @@ class Executor:
         reserved-but-never-written — enough waste to break the documented
         pool sizing rule when the chunk exceeds the remaining budget).
         The table upload is skipped while the mapping is unchanged
-        (steady decode inside a block)."""
-        cur0 = int(state.cache["cur"])
-        n_r = np.asarray(state.n_reasoning) if budget is not None else None
+        (steady decode inside a block).
+
+        ``cur`` / ``n_reasoning`` override the host reads of the state's
+        ring pointer and per-row counts: the overlap pipeline passes its
+        mirrors from the last retired fence so mapping never blocks on an
+        in-flight chunk.  Mirrors lag the device by up to one dispatched
+        chunk, so the pipeline also passes ``slack`` (extra leading slots,
+        mapped on top of the per-row clamp) to cover the writes of the
+        not-yet-harvested dispatch; pessimistic by at most one chunk of
+        pages per row."""
+        cur0 = int(state.cache["cur"]) if cur is None else int(cur)
+        n_r = None
+        if budget is not None:
+            n_r = (np.asarray(state.n_reasoning) if n_reasoning is None
+                   else np.asarray(n_reasoning))
         for s in slots:
             sp = span
             if n_r is not None:
                 left = max(1, budget - int(n_r[s]))
                 sp = min(span, left + tail)
-            alloc.ensure(s, cur0, cur0 + sp)
+            alloc.ensure(s, cur0, cur0 + slack + sp)
         if not alloc.dirty:
             return state
         # page-native caches carry the compacted read index: re-derive it
@@ -859,6 +968,78 @@ class Executor:
         with no overshoot passes through unchanged.  DONATES ``state``.
         """
         return self.retract_program(state)(
+            state, jnp.asarray(new_n, jnp.int32), pmon
+        )
+
+    def retract_lagged_program(self, state: ServeState):
+        key = ("retract", int(state.active.shape[0]),
+               self._kind(state.cache), "lagged")
+        if key not in self._programs:
+            ecfg = self.ecfg
+
+            def fn(state: ServeState, new_n, pmon: MonitorState) -> ServeState:
+                stop = pmon.stop_flag
+                # only proxy-STOPPED rows rewind: the others have already
+                # decoded one more chunk whose tokens the proxy has not
+                # observed yet — their counts must survive this dispatch
+                eff = jnp.where(stop, new_n, state.n_reasoning)
+                overshoot = state.n_reasoning - eff
+                next_pos = state.next_pos - overshoot
+                cache = dict(state.cache)
+                cache["pos"] = jnp.where(
+                    cache["pos"] >= next_pos[:, None], -1, cache["pos"]
+                )
+                cols = jnp.arange(state.out_tokens.shape[1],
+                                  dtype=jnp.int32)[None]
+                keep = cols < eff[:, None]
+                last = jnp.take_along_axis(
+                    state.out_tokens, (eff - 1)[:, None], 1)[:, 0]
+                ended = (jnp.where(keep, state.out_tokens, -1)
+                         == ecfg.end_think_id).any(-1)
+                return ServeState(
+                    cache=cache,
+                    rng=state.rng,
+                    active=state.active & ~stop,
+                    next_pos=next_pos,
+                    last_token=last,
+                    n_reasoning=eff,
+                    monitor=pmon,
+                    ended_think=ended,
+                    out_tokens=jnp.where(keep, state.out_tokens, ecfg.pad_id),
+                    out_len=eff,
+                )
+
+            if self.ctx.mesh is None:
+                jitted = jax.jit(fn, donate_argnums=0)
+            else:
+                ssh = self._state_sh(state)
+                b = self._batch_entry(int(state.active.shape[0]))
+                jitted = jax.jit(
+                    fn,
+                    in_shardings=(
+                        ssh,
+                        self._ns(P(b)),
+                        jax.tree_util.tree_map(lambda _: self._ns(P(b)),
+                                               state.monitor),
+                    ),
+                    out_shardings=ssh,
+                    donate_argnums=0,
+                )
+            self._programs[key] = jitted
+        return self._programs[key]
+
+    def retract_lagged(self, state: ServeState, new_n, pmon: MonitorState
+                       ) -> ServeState:
+        """Overlap-mode reconciliation, applied one chunk boundary late:
+        ``new_n``/``pmon`` are the proxy's verdict on chunk N while
+        ``state`` has already decoded chunk N+1.  Rows the proxy stopped
+        rewind exactly as ``retract`` does (their chunk-N overshoot AND
+        their whole speculative chunk N+1 are position-masked away); every
+        other row passes through untouched — its chunk-N+1 tokens are
+        valid and still awaiting the proxy's next observation.  The proxy
+        monitor replaces the generator's inert one wholesale, same as the
+        sync retract.  DONATES ``state``."""
+        return self.retract_lagged_program(state)(
             state, jnp.asarray(new_n, jnp.int32), pmon
         )
 

@@ -19,11 +19,19 @@ Lifecycle::
 
 Transitions are enforced — a scheduler bug that double-admits a request or
 harvests a queued one raises immediately instead of corrupting results.
+
+Under the overlapped serve loop (``serving.pipeline``) a request also
+carries IN_FLIGHT bookkeeping: ``admitted_fence`` records the dispatch
+fence open when the slot was granted (the pipeline skips the row in that
+fence's snapshot — the data there belongs to the slot's previous
+occupant), and ``submitted_at``/``latency_s`` give the per-request latency
+the scaling benchmark reports as percentiles.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
+import time
 from typing import Optional
 
 
@@ -57,6 +65,12 @@ class Request:
     eat_trace: list = dataclasses.field(default_factory=list)
     exit_reason: Optional[str] = None
     result: Optional[dict] = None
+    # wall-clock submission stamp (set by the serve loop's setup) — when
+    # present, finish() derives result["latency_s"] from it
+    submitted_at: Optional[float] = None
+    # overlap-mode IN_FLIGHT bookkeeping: the dispatch fence open when the
+    # slot was granted (see InFlightLedger.admitted_after)
+    admitted_fence: Optional[int] = None
 
     # ------------------------------------------------------- transitions
     def _expect(self, *allowed: RequestStatus):
@@ -110,6 +124,8 @@ class Request:
         }
         if answer_tokens is not None:
             self.result["answer_tokens"] = answer_tokens
+        if self.submitted_at is not None:
+            self.result["latency_s"] = time.perf_counter() - self.submitted_at
         self.slot = None
 
     # ----------------------------------------------------------- queries

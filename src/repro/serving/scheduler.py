@@ -264,17 +264,40 @@ class PageAllocator:
         self.map_block(row, min(cur // self.page_size, self.n_blocks - 1))
         return self.table[row].copy()
 
+    def detach_row(self, row: int) -> list[int]:
+        """Unmap ``row`` WITHOUT returning its pages to the free list —
+        the overlap pipeline's half of a deferred free: the row's table
+        entries go to trash now (so the next table push stops the device
+        writing there), but the physical pages stay out of circulation
+        until the in-flight fence that may still read them retires
+        (``InFlightLedger.defer_free`` holds them until then).  Returns
+        the detached pages in ownership order."""
+        pages = self._owned[row]
+        self._owned[row] = []
+        self.table[row] = 0
+        if pages:
+            self.dirty = True
+        return pages
+
+    def release_pages(self, pages: list[int]) -> None:
+        """Second half of a deferred free: put detached ``pages`` back on
+        the free list.  Guards against double-frees — a page must be
+        neither already free nor owned by any row."""
+        owned = {p for row in self._owned for p in row}
+        for p in pages:
+            if p in self.free or p in owned:
+                raise RuntimeError(
+                    f"double free of page {p}: already "
+                    f"{'free' if p in self.free else 'owned'}"
+                )
+        self.free.extend(reversed(pages))
+
     def free_row(self, row: int) -> int:
         """Return all of ``row``'s pages to the free list (harvest time)
         and unmap the row.  Returns the number of pages freed."""
-        pages = self._owned[row]
-        n = len(pages)
-        self.free.extend(reversed(pages))
-        self._owned[row] = []
-        self.table[row] = 0
-        if n:
-            self.dirty = True
-        return n
+        pages = self.detach_row(row)
+        self.release_pages(pages)
+        return len(pages)
 
     def snapshot(self) -> np.ndarray:
         """The table to push to the device; marks the allocator clean.
@@ -330,3 +353,111 @@ class PageAllocator:
             logical[b, :n] = blocks
             counts[b] = n
         return pages, logical, counts
+
+
+class InFlightLedger:
+    """Fence bookkeeping for the overlapped serve loop (pure host).
+
+    The async pipeline (``serving.pipeline``) dispatches chunk N+1 before
+    the host has harvested chunk N, so two chunk-boundary invariants the
+    sync loop gets for free need explicit tracking:
+
+    * **Deferred page frees** — a harvested row's KV pages may still be
+      READ by the chunk already in flight (its page table was captured at
+      dispatch).  ``defer_free`` detaches the pages from the allocator
+      (table entries go to trash, so the *next* table push stops writes)
+      but parks them on this ledger; they only re-enter the free list when
+      the fence open at detach time retires.
+
+    * **In-flight slot admission** — a slot freed at boundary N must not
+      be re-admitted in a way that double-books it, and a row admitted
+      DURING the tick that dispatched chunk F carries stale data in chunk
+      F's snapshot (the old occupant's) — ``admitted_after(F)`` is the
+      skip-set the boundary harvest uses to ignore those rows.
+
+    Fences are dense integers: ``open_fence`` stamps each dispatched
+    chunk, ``retire_fence`` retires them strictly in order (the pipeline
+    harvests boundaries in dispatch order; out-of-order retirement is a
+    pipeline bug and raises).  Lives next to the other pure-host
+    bookkeeping so scheduler tests (incl. the hypothesis property suite)
+    can drive it without a device.
+    """
+
+    def __init__(self):
+        self.fence = 0        # last fence opened (0 = nothing dispatched)
+        self.retired = 0      # last fence retired
+        self._pending: list[tuple[int, PageAllocator, list[int]]] = []
+        self._admitted_at: dict[int, int] = {}
+        self._occupied: set[int] = set()
+        self.pages_deferred = 0   # stat: pages that ever waited on a fence
+
+    # -------------------------------------------------------------- fences
+    @property
+    def in_flight(self) -> bool:
+        return self.fence > self.retired
+
+    @property
+    def quiescent(self) -> bool:
+        return not self._pending and self.fence == self.retired
+
+    def open_fence(self) -> int:
+        self.fence += 1
+        return self.fence
+
+    def retire_fence(self, fence: int) -> None:
+        if fence != self.retired + 1 or fence > self.fence:
+            raise RuntimeError(
+                f"fence {fence} retired out of order (last retired "
+                f"{self.retired}, last opened {self.fence})"
+            )
+        self.retired = fence
+        self._drain()
+
+    def _drain(self) -> None:
+        ready = [e for e in self._pending if e[0] <= self.retired]
+        self._pending = [e for e in self._pending if e[0] > self.retired]
+        for _, alloc, pages in ready:
+            alloc.release_pages(pages)
+
+    # --------------------------------------------------------- page frees
+    def defer_free(self, alloc: PageAllocator, row: int) -> int:
+        """Detach ``row``'s pages from ``alloc`` and hold them until the
+        fence currently open retires (released immediately when nothing is
+        in flight).  Returns the number of pages deferred."""
+        pages = alloc.detach_row(row)
+        if not pages:
+            return 0
+        self._pending.append((self.fence, alloc, pages))
+        self.pages_deferred += len(pages)
+        self._drain()
+        return len(pages)
+
+    # ----------------------------------------------------------- slot book
+    def mark_admitted(self, slot: int) -> int:
+        """Record ``slot`` (re)admitted at the current fence.  Raises if
+        the ledger still considers the slot occupied — admitting into an
+        in-flight slot is the bug the property tests hunt."""
+        if slot in self._occupied:
+            raise RuntimeError(f"slot {slot} admitted while still occupied")
+        self._occupied.add(slot)
+        self._admitted_at[slot] = self.fence
+        return self.fence
+
+    def mark_released(self, slot: int, fence: int) -> None:
+        """Record ``slot`` released at boundary ``fence`` — which must
+        already have retired (a release decided off a still-speculative
+        snapshot would be a pipeline bug)."""
+        if fence > self.retired:
+            raise RuntimeError(
+                f"slot {slot} released at un-retired fence {fence} "
+                f"(last retired {self.retired})"
+            )
+        if slot not in self._occupied:
+            raise RuntimeError(f"slot {slot} released but not occupied")
+        self._occupied.discard(slot)
+
+    def admitted_after(self, fence: int) -> set[int]:
+        """Slots whose current occupant was admitted at or after ``fence``
+        opened — their rows in fence ``fence``'s snapshot belong to the
+        PREVIOUS occupant and must be skipped by the boundary harvest."""
+        return {s for s, f in self._admitted_at.items() if f >= fence}

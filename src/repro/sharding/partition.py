@@ -215,6 +215,19 @@ def proxy_stream_pspecs(ctx: ShardCtx, batch: int):
     return P(b, None), P(b)
 
 
+def serve_snapshot_pspecs(ctx: ShardCtx, batch: int):
+    """PartitionSpecs for a chunk snapshot — the packed host-facing output
+    of ``serving.executor.Executor.chunk_snapshot_program`` that the
+    overlap pipeline harvests one boundary late.  The (R, B) int row-pack
+    shards its batch COLUMN on the data axis (rows enumerate
+    ``executor.SNAP_ROWS``), the (B,) debiased-variance vector and the
+    (B, T+1) token-buffer copy ride the data axis like every per-slot
+    array — same ``batch_entry_for`` divisibility rule, so B=1 shapes
+    replicate.  Keys mirror the snapshot dict of ``_snapshot_of``."""
+    b = ctx.batch_entry_for(batch)
+    return {"ints": P(None, b), "var": P(b), "tokens": P(b, None)}
+
+
 def serve_state_pspecs(cfg: ModelConfig, ctx: ShardCtx, state):
     """PartitionSpec pytree for a ``serving.executor.ServeState``.
 

@@ -1,0 +1,9 @@
+# layering fixture: a dispatch-only module blocking on device work
+# (seeded violation) — once via the jax attribute, once via an alias
+import jax
+
+
+def harvest(snap):
+    jax.block_until_ready(snap)
+    wait = jax.block_until_ready
+    return wait(snap)

@@ -1,0 +1,376 @@
+"""Async (double-buffered) serve loop: equivalence + interleaving harness.
+
+The overlapped pipeline (``serving.pipeline``) dispatches chunk N+1 before
+harvesting chunk N, so its correctness claims are about *schedules*, not
+just end states.  This suite pins both:
+
+* bit-exactness — ``serve(overlap=True)`` reproduces the sync loop
+  token-for-token under greedy sampling across the full backend matrix
+  {ring, paged} x {self, proxy} x {exit-at-first-eval, run-to-budget},
+  including exact float equality on the EAT traces and the forced answers;
+* forced interleavings — ``PipelineHooks`` is the test seam: a hook that
+  blocks on every snapshot at dispatch degenerates the pipeline to
+  harvest-before-dispatch (the overlap must never be *required*), while a
+  recorder hook proves the default schedule really is dispatch-ahead
+  (chunk F+1 in flight before boundary F is read) and that proxy
+  reconciliation lags by exactly one boundary;
+* retract-under-overlap — proxy overshoot rewinds spanning a page
+  boundary, and a harvested row's pages stay OUT of the allocator free
+  list until the in-flight fence retires (``InFlightLedger`` fence
+  bookkeeping), while page reuse across admissions still happens;
+* the 4x2 (data x model) mesh — the same sync==async equivalence through
+  GSPMD sharding, in a subprocess with 8 forced host devices (the CI
+  multidevice job runs this file — see .github/workflows/ci.yml).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.eat import make_probe
+from repro.core.monitor import ReasoningMonitor
+from repro.core.stopping import EATStopper
+from repro.data.synthetic import ChainTask, Tokens
+from repro.models import Model
+from repro.serving.cache import CacheConfig
+from repro.serving.engine import EngineConfig, ReasoningEngine
+from repro.serving.pipeline import PipelineHooks
+from repro.serving.proxy import ProxyConfig
+from repro.serving.sampler import SamplerConfig
+
+
+@pytest.fixture(scope="module")
+def gen_model():
+    model = Model(get_config("tiny"), attn_impl="xla")
+    return model, model.init(jax.random.PRNGKey(11))
+
+
+@pytest.fixture(scope="module")
+def serve_batch():
+    return ChainTask().serve_batch(np.random.default_rng(7), 6)
+
+
+def _engine(gen_model, *, kind="ring", delta=1e9, proxy=False, capacity=320,
+            num_pages=0, budget=24, page_size=16):
+    """Greedy tiny engine matching tests/test_proxy_serve.py; greedy
+    sampling is what makes sync==async bit-exact (overlap shifts the
+    admission rng-split schedule by up to one boundary, which argmax
+    ignores)."""
+    model, params = gen_model
+    ecfg = EngineConfig(
+        max_reasoning_tokens=budget, capacity=capacity,
+        pad_id=Tokens.PAD, end_think_id=Tokens.END_THINK,
+        newline_id=Tokens.NEWLINE, eos_id=Tokens.EOS, chunk_len=8,
+        sampler=SamplerConfig(greedy=True),
+        cache=CacheConfig(kind=kind, page_size=page_size,
+                          num_pages=num_pages),
+    )
+    monitor = ReasoningMonitor(
+        stopper=EATStopper(alpha=0.2, delta=delta),
+        probe=make_probe(Tokens.END_THINK, (Tokens.ANS,)),
+        schedule="every_n", every_n=4, min_evals=1,
+    )
+    pcfg = ProxyConfig(model=model, params=params) if proxy else None
+    return ReasoningEngine(model, params, ecfg, monitor, proxy=pcfg)
+
+
+def _serve(engine, b, **kw):
+    return engine.serve(b["prompts"], b["prompt_len"], jax.random.PRNGKey(0),
+                        batch_size=4, max_tokens=24, answer_len=4,
+                        record_trace=True, **kw)
+
+
+def _assert_bit_exact(ref, out, tag):
+    assert len(ref) == len(out), tag
+    for r, o in zip(ref, out):
+        t = (tag, r["request"])
+        assert r["n_reasoning"] == o["n_reasoning"], t
+        assert r["exit_reason"] == o["exit_reason"], t
+        assert r["ended_think"] == o["ended_think"], t
+        np.testing.assert_array_equal(r["reasoning_tokens"],
+                                      o["reasoning_tokens"])
+        np.testing.assert_array_equal(r["answer_tokens"], o["answer_tokens"])
+        assert r["eat_trace"] == o["eat_trace"], t    # bit-exact floats
+        assert o["latency_s"] > 0, t                  # per-request latency
+
+
+# --------------------------------------------------------- the sync==async matrix
+@pytest.mark.parametrize("kind", ["ring", "paged"])
+@pytest.mark.parametrize("tier", ["self", "proxy"])
+@pytest.mark.parametrize("delta", [1e9, 0.0])
+def test_overlap_bit_exact_matrix(gen_model, serve_batch, kind, tier, delta):
+    """serve(overlap=True) == serve() across both cache backends, both
+    monitor tiers, and both exit regimes (exit-at-first-eval and
+    run-to-budget) — token streams, exit steps/reasons, forced answers,
+    and EAT traces all bit-equal."""
+    eng = _engine(gen_model, kind=kind, delta=delta, proxy=(tier == "proxy"))
+    ref = _serve(eng, serve_batch)
+    out = _serve(eng, serve_batch, overlap=True)
+    _assert_bit_exact(ref, out, (kind, tier, delta))
+    # the pipeline drained: every fence retired, no page parked
+    assert eng._ledger.quiescent
+
+
+# -------------------------------------------------- forced adversarial schedules
+class EagerBlockHooks(PipelineHooks):
+    """Degenerate the pipeline to harvest-before-dispatch: block on every
+    snapshot the moment it is dispatched, so boundary F is fully
+    materialized before the loop proceeds — correctness must never depend
+    on the overlap actually overlapping."""
+
+    def __init__(self):
+        self.blocked = 0
+
+    def on_dispatch(self, fence, snap):
+        np.asarray(snap["ints"])
+        np.asarray(snap["var"])
+        np.asarray(snap["tokens"])
+        self.blocked += 1
+
+
+class RecorderHooks(PipelineHooks):
+    """Record the pipeline event order for schedule assertions."""
+
+    def __init__(self):
+        self.events = []
+
+    def on_dispatch(self, fence, snap):
+        self.events.append(("dispatch", fence))
+
+    def on_retire(self, fence):
+        self.events.append(("retire", fence))
+
+    def on_observe(self, fence, pstate):
+        self.events.append(("observe", fence))
+
+    def on_retract(self, fence):
+        self.events.append(("retract", fence))
+
+    def on_harvest(self, fence, slots):
+        self.events.append(("harvest", fence, tuple(slots)))
+
+    def on_admit(self, fence, slot):
+        self.events.append(("admit", fence, slot))
+
+    def index(self, ev):
+        return self.events.index(ev)
+
+
+@pytest.mark.parametrize("kind,tier", [("ring", "self"), ("paged", "proxy")])
+def test_harvest_before_dispatch_degenerate(gen_model, serve_batch, kind,
+                                            tier):
+    """The adversarial anti-schedule: a hook that blocks on each snapshot
+    inside on_dispatch serializes the loop (chunk F is DONE before the
+    host moves on).  Results must still be bit-identical to the sync
+    loop."""
+    eng = _engine(gen_model, kind=kind, proxy=(tier == "proxy"))
+    ref = _serve(eng, serve_batch)
+    hooks = EagerBlockHooks()
+    out = _serve(eng, serve_batch, overlap=True, pipeline_hooks=hooks)
+    _assert_bit_exact(ref, out, ("eager-block", kind, tier))
+    assert hooks.blocked > 1
+
+
+def test_default_schedule_is_dispatch_ahead(gen_model, serve_batch):
+    """The default schedule really overlaps: chunk F+1 is dispatched
+    BEFORE boundary F is read back, every boundary retires in dispatch
+    order, and at least one harvest lands while a later chunk flies."""
+    eng = _engine(gen_model, kind="paged")
+    hooks = RecorderHooks()
+    _serve(eng, serve_batch, overlap=True, pipeline_hooks=hooks)
+    ev = hooks.events
+    dispatched = [e[1] for e in ev if e[0] == "dispatch"]
+    retired = [e[1] for e in ev if e[0] == "retire"]
+    # every dispatched fence retires, strictly in order
+    assert retired == sorted(dispatched)
+    # dispatch-before-harvest: every non-final boundary F is read AFTER
+    # chunk F+1 went out
+    for f in retired:
+        if ("dispatch", f + 1) in ev:
+            assert hooks.index(("dispatch", f + 1)) < hooks.index(
+                ("retire", f)), (f, ev)
+    # at least one request was harvested while a later chunk was in flight
+    overlapped_harvests = [
+        e for e in ev if e[0] == "harvest"
+        and ("dispatch", e[1] + 1) in ev
+    ]
+    assert overlapped_harvests, ev
+
+
+def test_proxy_reconciliation_lags_one_boundary(gen_model, serve_batch):
+    """monitor=proxy under overlap: the shadow observe and the lagged
+    retract for chunk F happen after chunk F+1 was dispatched — the
+    proxy's exit verdict lands exactly one boundary late, never earlier,
+    never later."""
+    eng = _engine(gen_model, proxy=True)
+    hooks = RecorderHooks()
+    _serve(eng, serve_batch, overlap=True, pipeline_hooks=hooks)
+    ev = hooks.events
+    observed = [e[1] for e in ev if e[0] == "observe"]
+    assert observed, ev
+    for f in observed:
+        # observe(F) and retract(F) trail dispatch(F+1) when it exists
+        if ("dispatch", f + 1) in ev:
+            assert hooks.index(("dispatch", f + 1)) < hooks.index(
+                ("observe", f)), (f, ev)
+            assert hooks.index(("dispatch", f + 1)) < hooks.index(
+                ("retract", f)), (f, ev)
+        # ...and each verdict is applied before the NEXT boundary is read
+        if ("retire", f + 1) in ev:
+            assert hooks.index(("retract", f)) < hooks.index(
+                ("retire", f + 1)), (f, ev)
+
+
+# ------------------------------------------------------- retract under overlap
+def test_retract_overshoot_spans_page_boundary(gen_model, serve_batch):
+    """Deferred proxy retract whose rewind crosses a physical page edge:
+    page_size=4 with chunk_len=8 makes every chunk span >= 2 pages, so the
+    one-boundary-late rewind truncates across a page boundary.  Still
+    bit-exact vs the sync loop (which retracts the same overshoot one
+    boundary earlier)."""
+    eng = _engine(gen_model, kind="paged", proxy=True, page_size=4)
+    ref = _serve(eng, serve_batch)
+    out = _serve(eng, serve_batch, overlap=True)
+    _assert_bit_exact(ref, out, "overshoot-page-boundary")
+
+
+class FenceGuardHooks(PipelineHooks):
+    """At every harvest that lands while a chunk is in flight, assert the
+    freed rows' pages are parked on the ledger — neither back on the free
+    list (the in-flight chunk's captured page table still maps them) nor
+    owned by any row."""
+
+    def __init__(self, engine):
+        self.engine = engine
+        self.in_flight_harvests = 0
+        self.allocs = set()
+
+    def on_harvest(self, fence, slots):
+        led = self.engine._ledger
+        if not led.in_flight:
+            return
+        self.in_flight_harvests += 1
+        assert led._pending, "in-flight harvest parked no pages"
+        for pf, alloc, pages in led._pending:
+            self.allocs.add(id(alloc))
+            self._alloc = alloc
+            owned = {p for row in alloc._owned for p in row}
+            for p in pages:
+                assert p not in alloc.free, (fence, p)
+                assert p not in owned, (fence, p)
+
+
+def test_freed_pages_wait_for_in_flight_fence(gen_model, serve_batch):
+    """An exit-latched row freed while the next chunk is already
+    dispatched: its pages must not re-enter circulation until that fence
+    retires — and page reuse must still happen once it does (the deferred
+    free feeds later mappings, it doesn't leak).  delta=0.0 keeps the
+    second cohort decoding to the budget, so it maps fresh blocks AFTER
+    the first cohort's parked pages re-entered the free list."""
+    eng = _engine(gen_model, kind="paged", delta=0.0)
+    hooks = FenceGuardHooks(eng)
+    _serve(eng, serve_batch, overlap=True, pipeline_hooks=hooks)
+    assert hooks.in_flight_harvests > 0         # the scenario actually ran
+    assert eng._ledger.pages_deferred > 0
+    assert eng._ledger.quiescent                # all parked pages released
+    # the deferred pages came back: later admissions reused them
+    assert hooks._alloc.pages_reused > 0
+    assert hooks._alloc.pages_in_use == 0
+
+
+# ------------------------------------------------------------------ 4x2 mesh
+MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np
+from repro.configs.base import get_config
+from repro.core.eat import make_probe
+from repro.core.monitor import ReasoningMonitor
+from repro.core.stopping import EATStopper
+from repro.data.synthetic import ChainTask, Tokens
+from repro.launch.mesh import make_device_ctx
+from repro.models import Model
+from repro.serving.cache import CacheConfig
+from repro.serving.engine import EngineConfig, ReasoningEngine
+from repro.serving.pipeline import PipelineHooks
+from repro.serving.proxy import ProxyConfig
+from repro.serving.sampler import SamplerConfig
+
+assert len(jax.devices()) == 8, jax.devices()
+
+def build(delta, cache_kind="ring", proxy=False):
+    cfg = get_config("tiny")
+    model = Model(cfg, make_device_ctx(4, 2), attn_impl="xla")
+    params = model.init(jax.random.PRNGKey(11))
+    ecfg = EngineConfig(
+        max_reasoning_tokens=24, capacity=320,
+        pad_id=Tokens.PAD, end_think_id=Tokens.END_THINK,
+        newline_id=Tokens.NEWLINE, eos_id=Tokens.EOS, chunk_len=8,
+        sampler=SamplerConfig(greedy=True),
+        cache=CacheConfig(kind=cache_kind, page_size=16),
+    )
+    monitor = ReasoningMonitor(
+        stopper=EATStopper(alpha=0.2, delta=delta),
+        probe=make_probe(Tokens.END_THINK, (Tokens.ANS,)),
+        schedule="every_n", every_n=4, min_evals=1,
+    )
+    pcfg = ProxyConfig(model=model, params=params) if proxy else None
+    return ReasoningEngine(model, params, ecfg, monitor, proxy=pcfg)
+
+b = ChainTask().serve_batch(np.random.default_rng(7), 6)
+
+def serve(eng, **kw):
+    return eng.serve(b["prompts"], b["prompt_len"], jax.random.PRNGKey(0),
+                     batch_size=4, max_tokens=24, answer_len=4,
+                     record_trace=True, **kw)
+
+def check(ref, out, tag):
+    for r, o in zip(ref, out):
+        assert r["n_reasoning"] == o["n_reasoning"], (tag, r, o)
+        assert r["exit_reason"] == o["exit_reason"], (tag, r, o)
+        assert r["ended_think"] == o["ended_think"], (tag, r, o)
+        np.testing.assert_array_equal(r["reasoning_tokens"],
+                                      o["reasoning_tokens"])
+        np.testing.assert_array_equal(r["answer_tokens"], o["answer_tokens"])
+        assert r["eat_trace"] == o["eat_trace"], tag
+    print("mesh overlap ==", tag, flush=True)
+
+# both exit regimes on the default backend, then the backend x tier matrix
+for delta in (1e9, 0.0):
+    eng = build(delta)
+    check(serve(eng), serve(eng, overlap=True), ("ring", "self", delta))
+for kind, proxy in (("paged", False), ("ring", True), ("paged", True)):
+    eng = build(1e9, cache_kind=kind, proxy=proxy)
+    check(serve(eng), serve(eng, overlap=True),
+          (kind, "proxy" if proxy else "self", 1e9))
+
+# forced adversarial interleaving under GSPMD: block every snapshot at
+# dispatch (harvest-before-dispatch degenerate) — still bit-exact
+class EagerBlock(PipelineHooks):
+    def on_dispatch(self, fence, snap):
+        np.asarray(snap["ints"])
+        np.asarray(snap["tokens"])
+
+eng = build(1e9, cache_kind="paged", proxy=True)
+check(serve(eng), serve(eng, overlap=True, pipeline_hooks=EagerBlock()),
+      ("eager-block", "paged", "proxy"))
+print("done")
+"""
+
+
+def test_mesh_overlap_equivalence_8dev():
+    """sync == async on a 4x2 (data x model) mesh across both backends and
+    both monitor tiers, plus a forced adversarial interleaving — in a
+    subprocess with 8 simulated host devices (the device count is fixed at
+    jax import)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", MESH_SCRIPT],
+                       capture_output=True, text=True, env=env, timeout=900)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "done" in r.stdout

@@ -34,11 +34,13 @@ def test_layering_catches_fixture_tree():
     r = layering.run(FIXTURES / "layer_tree")
     assert _rules(r.violations) == {
         "pure-host", "executor-only-jit", "kernels-are-leaves",
-        "stays-deleted",
+        "dispatch-only", "stays-deleted",
     }
     # the jit owner's own jit sites are not flagged
     assert not any("executor" in v.where for v in r.violations
                    if v.rule == "executor-only-jit")
+    # the overlap pipeline fixture blocks twice (direct + aliased)
+    assert len([v for v in r.violations if v.rule == "dispatch-only"]) == 2
 
 
 def test_layering_clean_on_real_tree():

@@ -12,6 +12,7 @@ from repro.serving.request import (
     RequestStatus,
 )
 from repro.serving.scheduler import (
+    InFlightLedger,
     PageAllocator,
     SlotScheduler,
     pools_can_admit,
@@ -163,3 +164,202 @@ def test_proxy_pool_exhaustion_defers_independently_of_generator():
     table_row = proxy.admit_row(1, S, cur=24)
     assert (table_row[:2] != 0).all()                    # prompt mapped
     assert proxy.pages_reused > 0                        # from slot 0's frees
+
+
+# -------------------------------- in-flight ledger (overlapped serve loop)
+def test_ledger_defer_free_waits_for_fence():
+    """The overlap invariant: a harvested row's pages stay OUT of the free
+    list while a fence is in flight (the dispatched chunk's captured page
+    table still maps them) and re-enter it the moment that fence retires."""
+    alloc = PageAllocator(num_pages=12, page_size=8, n_blocks=8, batch=2)
+    led = InFlightLedger()
+    led.mark_admitted(0)
+    alloc.admit_row(0, 12, cur=16)                       # 3 pages
+    free_before = alloc.free_pages
+
+    f = led.open_fence()
+    assert led.in_flight and not led.quiescent
+    assert led.defer_free(alloc, 0) == 3
+    assert led.pages_deferred == 3
+    # detached: unmapped (trash) but NOT free — parked on the ledger
+    assert (alloc.table[0] == 0).all()
+    assert alloc.free_pages == free_before
+    assert alloc.pages_in_use == 3                       # parked, not owned
+
+    led.retire_fence(f)
+    assert alloc.free_pages == free_before + 3
+    assert alloc.pages_in_use == 0
+    assert led.quiescent
+
+
+def test_ledger_release_immediate_when_quiescent():
+    """Nothing in flight -> a deferred free degenerates to a plain free
+    (the final-drain boundary must hand pages straight to admissions)."""
+    alloc = PageAllocator(num_pages=12, page_size=8, n_blocks=8, batch=2)
+    led = InFlightLedger()
+    f = led.open_fence()
+    led.retire_fence(f)                                  # quiescent again
+    alloc.admit_row(1, 12, cur=16)
+    assert led.defer_free(alloc, 1) == 3
+    assert alloc.free_pages == 11 - 1 + 1                # all data pages free
+    assert led.quiescent
+
+
+def test_ledger_retire_out_of_order_raises():
+    led = InFlightLedger()
+    led.open_fence()
+    led.open_fence()
+    with pytest.raises(RuntimeError, match="out of order"):
+        led.retire_fence(2)                              # skips fence 1
+    with pytest.raises(RuntimeError, match="out of order"):
+        led.retire_fence(3)                              # never opened
+    led.retire_fence(1)
+    led.retire_fence(2)
+    with pytest.raises(RuntimeError, match="out of order"):
+        led.retire_fence(2)                              # double retire
+
+
+def test_ledger_admit_into_occupied_slot_raises():
+    led = InFlightLedger()
+    led.mark_admitted(3)
+    with pytest.raises(RuntimeError, match="still occupied"):
+        led.mark_admitted(3)
+    f = led.open_fence()
+    led.retire_fence(f)
+    led.mark_released(3, f)
+    assert led.mark_admitted(3) == led.fence             # free again
+
+
+def test_ledger_release_guards():
+    led = InFlightLedger()
+    led.mark_admitted(0)
+    led.open_fence()
+    with pytest.raises(RuntimeError, match="un-retired fence"):
+        led.mark_released(0, 1)           # off a still-speculative snapshot
+    led.retire_fence(1)
+    with pytest.raises(RuntimeError, match="not occupied"):
+        led.mark_released(2, 1)
+    led.mark_released(0, 1)
+
+
+def test_ledger_admitted_after_skip_set():
+    """Rows admitted at or after fence F opened carry the previous
+    occupant's data in chunk F's snapshot — the boundary harvest skips
+    exactly those."""
+    led = InFlightLedger()
+    led.mark_admitted(0)                  # fence 0: initial cohort
+    f1 = led.open_fence()
+    led.mark_admitted(1)                  # while chunk 1 flies
+    assert led.admitted_after(f1) == {1}
+    assert led.admitted_after(f1 + 1) == set()
+    led.retire_fence(f1)
+    f2 = led.open_fence()
+    assert led.admitted_after(f2) == set()          # slot 1 now real in f2
+
+
+def test_allocator_double_free_guard():
+    alloc = PageAllocator(num_pages=12, page_size=8, n_blocks=8, batch=2)
+    alloc.admit_row(0, 12, cur=16)
+    pages = alloc.detach_row(0)
+    alloc.release_pages(pages)
+    with pytest.raises(RuntimeError, match="double free"):
+        alloc.release_pages(pages)                       # already free
+    alloc.admit_row(0, 12, cur=16)                       # re-maps them
+    with pytest.raises(RuntimeError, match="double free"):
+        alloc.release_pages(alloc._owned[0][:1])         # owned, not parked
+
+
+# ------------------------- overlap scheduler property (random schedules)
+def _run_pipeline_schedule(ops, *, num_pages=12, batch=4, prompt=6):
+    """Drive PageAllocator + InFlightLedger through an arbitrary legal
+    op sequence the way serving/pipeline.py would, checking conservation
+    after every step, then drain to quiescence.
+
+    Invariants (the bugs the overlap pipeline could introduce):
+      * page conservation — every data page is exactly one of {free,
+        owned by a row, parked on the ledger}; no page in two places
+        (double free / double map);
+      * a slot is never admitted while the ledger holds it occupied;
+      * the drain always reaches quiescence with every page free.
+    """
+    alloc = PageAllocator(num_pages=num_pages, page_size=4, n_blocks=8,
+                          batch=batch)
+    led = InFlightLedger()
+    occupied: set[int] = set()
+    grown: dict[int, int] = {}
+
+    def check_conservation():
+        free = set(alloc.free)
+        owned = [p for row in alloc._owned for p in row]
+        parked = [p for _, _, pages in led._pending for p in pages]
+        assert len(owned) == len(set(owned)), "page owned twice"
+        assert len(free) == alloc.free_pages
+        all_pages = sorted(list(free) + owned + parked)
+        assert all_pages == list(range(1, num_pages)), (
+            free, owned, parked)
+
+    for kind, slot, arg in ops:
+        slot = slot % batch
+        if kind == 0:                                    # dispatch a chunk
+            led.open_fence()
+        elif kind == 1 and led.in_flight:                # harvest a boundary
+            led.retire_fence(led.retired + 1)
+        elif kind == 2 and slot not in occupied:         # admit
+            if alloc.can_admit(prompt):
+                alloc.admit_row(slot, prompt, cur=arg % 32)
+                led.mark_admitted(slot)
+                occupied.add(slot)
+                grown[slot] = prompt
+        elif kind == 3 and slot in occupied:             # harvest + free
+            led.mark_released(slot, led.retired)
+            led.defer_free(alloc, slot)
+            occupied.discard(slot)
+        elif kind == 4 and slot in occupied:             # decode growth
+            hi = min(grown[slot] + arg % 8, 31)
+            if alloc.free_pages >= alloc.blocks_for(hi + 1):
+                alloc.ensure(slot, 0, hi)
+                grown[slot] = hi
+        check_conservation()
+
+    # drain: retire every open fence, free every resident row
+    while led.in_flight:
+        led.retire_fence(led.retired + 1)
+        check_conservation()
+    for slot in sorted(occupied):
+        led.mark_released(slot, led.retired)
+        led.defer_free(alloc, slot)
+        check_conservation()
+    assert led.quiescent
+    assert alloc.pages_in_use == 0
+    assert alloc.free_pages == num_pages - 1
+
+
+def test_overlap_schedule_seeded_random():
+    """Deterministic arm of the property: 20 seeded random schedules run
+    everywhere (the hypothesis arm below widens the search when the
+    dependency is present)."""
+    for seed in range(20):
+        rng = np.random.default_rng(seed)
+        ops = [(int(k), int(s), int(a))
+               for k, s, a in zip(rng.integers(0, 5, 200),
+                                  rng.integers(0, 4, 200),
+                                  rng.integers(0, 32, 200))]
+        _run_pipeline_schedule(ops)
+
+
+def test_overlap_schedule_property_hypothesis():
+    """Property arm: arbitrary admission/exit/deferral/dispatch sequences
+    never double-free a page, never admit into an occupied slot, and
+    always drain to quiescence."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    op = st.tuples(st.integers(0, 4), st.integers(0, 3), st.integers(0, 31))
+
+    @settings(max_examples=60, deadline=None)
+    @given(ops=st.lists(op, max_size=120),
+           num_pages=st.integers(4, 24))
+    def run(ops, num_pages):
+        _run_pipeline_schedule(ops, num_pages=num_pages)
+
+    run()
